@@ -1,0 +1,19 @@
+"""Paper §4.2 + Fig. 4: area model."""
+
+import time
+
+from repro.core.area import (TILE_BREAKDOWN, fs_tile_overhead, system_area)
+
+
+def run() -> None:
+    t0 = time.perf_counter()
+    print(f"area/tile_fs_overhead,1,delta={fs_tile_overhead()*100:.4f}%"
+          f";paper=<0.01%")
+    for k in (4, 8, 16, 32, 64):
+        a = system_area(k)
+        print(f"area/system_{k}x{k},1,total={a.total_mm2:.1f}mm2;"
+              f"noc={a.noc_share*100:.2f}%;fs={a.fs_share*100:.4f}%")
+    top = sorted(TILE_BREAKDOWN.items(), key=lambda kv: -kv[1])[:4]
+    comp = ";".join(f"{k}={v*100:.1f}%" for k, v in top)
+    print(f"area/tile_breakdown,1,{comp}")
+    _ = (time.perf_counter() - t0)

@@ -1,0 +1,31 @@
+"""XLA measurement probes that justify the hlo_analysis corrections."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.launch import hlo_analysis as H
+
+
+def run() -> None:
+    def f(x, w):
+        def body(h, wi):
+            return h @ wi, ()
+        h, _ = lax.scan(body, x, w)
+        return jnp.sum(h)
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    flops = {}
+    for L in (1, 8):
+        w = jax.ShapeDtypeStruct((L, 256, 256), jnp.float32)
+        c = jax.jit(f).lower(x, w).compile()
+        flops[L] = c.cost_analysis()["flops"]
+        st = H.analyze_hlo(c.as_text())
+        print(f"probes/cost_analysis_scan{L},1,"
+              f"xla_flops={flops[L]:.3e};corrected={st.flops:.3e};"
+              f"true={2*256**3*L:.3e}")
+    ratio = flops[8] / flops[1]
+    print(f"probes/while_trip_count_ignored,1,"
+          f"xla_ratio_8v1={ratio:.2f};expected_if_correct=8.0")

@@ -1,0 +1,93 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*/*.json).
+
+One row per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, per-device memory, roofline fraction.
+Also emits the EXPERIMENTS.md §Roofline markdown via --write-md (used by the
+docs pipeline; the CSV rows here feed bench_output.txt).
+"""
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_records():
+    recs = []
+    if not RESULTS.exists():
+        return recs
+    for mesh_dir in sorted(RESULTS.iterdir()):
+        if not mesh_dir.is_dir():
+            continue
+        for p in sorted(mesh_dir.glob("*.json")):
+            if "__opt" in p.stem or p.stem.count("__") > 1:
+                continue   # hillclimb variants live in §Perf, not here
+            recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def run() -> None:
+    recs = load_records()
+    if not recs:
+        print("roofline,skip,no dry-run artifacts (run repro.launch.dryrun)")
+        return
+    for r in recs:
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") == "skipped":
+            print(f"roofline/{cell},0,skipped:{r.get('reason', '')[:60]}")
+            continue
+        if r.get("status") != "ok":
+            print(f"roofline/{cell},0,error:{r.get('error', '')[:80]}")
+            continue
+        rf = r.get("roofline", {})
+        mem = r.get("memory", {}).get("total_per_device_gib", float("nan"))
+        print(
+            f"roofline/{cell},{r.get('compile_s', 0) * 1e6:.0f},"
+            f"compute={rf.get('compute_s', 0):.3f}s;"
+            f"memory={rf.get('memory_s', 0):.3f}s;"
+            f"collective={rf.get('collective_s', 0):.3f}s;"
+            f"dom={rf.get('dominant', '?')};"
+            f"useful={r.get('useful_flops_ratio', 0)};"
+            f"frac={r.get('roofline_fraction', 0)};"
+            f"mem={mem}GiB")
+
+
+def markdown_table(records=None) -> str:
+    records = records or load_records()
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s "
+        "(ici/dcn) | dominant | useful FLOPs ratio | roofline frac | "
+        "GiB/dev | note |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+                f"| — | — | — | skipped: {r.get('reason', '')} |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+                f"| — | — | — | ERROR: {r.get('error', '')[:80]} |")
+            continue
+        rf = r.get("roofline", {})
+        mem = r.get("memory", {}).get("total_per_device_gib", "n/a")
+        ici = rf.get("collective_ici_s", 0)
+        dcn = rf.get("collective_dcn_s", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf.get('compute_s', 0):.3f} | {rf.get('memory_s', 0):.3f} "
+            f"| {rf.get('collective_s', 0):.3f} ({ici:.3f}/{dcn:.3f}) "
+            f"| {rf.get('dominant', '?').replace('_s', '')} "
+            f"| {r.get('useful_flops_ratio', '—')} "
+            f"| {r.get('roofline_fraction', '—')} | {mem} | |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--write-md" in sys.argv:
+        print(markdown_table())
+    else:
+        run()

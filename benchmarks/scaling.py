@@ -1,0 +1,48 @@
+"""Beyond-paper scaling study: 2×2 → 64×64 meshes, and the TPU projection.
+
+Part 1 — MAGIA constants (cycle-accurate sim + analytic FSync): extends the
+paper's Table 1 beyond 16×16; the AMO baselines are simulated up to 16×16
+and the FractalSync columns are exact at every size.
+
+Part 2 — TPU constants (α-β cost model): the same four schedules pricing a
+pure barrier and a 1 GiB gradient all-reduce on a v5e pod and on 2 pods —
+the regime our framework actually targets (EXPERIMENTS.md §Schedules).
+"""
+
+import math
+import time
+
+from repro.core import cost_model as cm
+from repro.core.simulator import scaling_sweep
+
+
+def run() -> None:
+    t0 = time.perf_counter()
+    sweep = scaling_sweep(ks=(2, 4, 8, 16, 32, 64))
+    us = (time.perf_counter() - t0) * 1e6
+    for name, row in sweep.items():
+        extra = ""
+        if "naive" in row:
+            extra = (f";naive={row['naive']:.0f};xy={row['xy']:.0f};"
+                     f"speedup={row['speedup']:.0f}x")
+        print(f"scaling/magia/{name},{us/6:.0f},"
+              f"fsync={row['fsync']:.0f};fsync_p={row['fsync_p']:.0f}{extra}")
+
+    # ---- TPU projection ----
+    for n, label in ((256, "pod"), (512, "2pods")):
+        link = cm.TPU_V5E_ICI
+        for sched in ("fractal", "xy", "ring", "naive"):
+            b = cm.barrier_cost(n, link, sched)
+            print(f"scaling/tpu_barrier/{label}/{sched},1,"
+                  f"{b*1e6:.1f}us")
+        vol = 2**30
+        for sched in ("fractal", "xy", "ring", "naive"):
+            c = cm.schedule_cost(sched, n, vol, link,
+                                 mesh_xy=(int(math.sqrt(n)),
+                                          n // int(math.sqrt(n))))
+            print(f"scaling/tpu_allreduce_1GiB/{label}/{sched},1,"
+                  f"{c*1e3:.2f}ms")
+        h = cm.hierarchical_all_reduce(256, n // 256, vol, cm.TPU_V5E_ICI,
+                                       cm.TPU_DCN)
+        print(f"scaling/tpu_allreduce_1GiB/{label}/hierarchical,1,"
+              f"{h*1e3:.2f}ms")

@@ -1,0 +1,26 @@
+"""Paper Table 1: synchronization overhead of FSync / FSync+P / Naïve / XY.
+
+Emits one row per (mesh × scheme) with the simulated cycle count, the paper's
+number, and the ratio; plus the headline speedup rows (FSync+P vs best AMO).
+"""
+
+import time
+
+from repro.core.simulator import PAPER_TABLE1, table1
+
+
+def run() -> None:
+    t0 = time.perf_counter()
+    results = table1()
+    elapsed_us = (time.perf_counter() - t0) * 1e6
+
+    for name, row in results.items():
+        fsync, fsync_p, naive, xy, speedup = PAPER_TABLE1[name]
+        paper = {"fsync": fsync, "fsync_p": fsync_p, "naive": naive, "xy": xy}
+        for scheme in ("fsync", "fsync_p", "naive", "xy"):
+            got = row[scheme]
+            print(f"table1/{name}/{scheme},{elapsed_us/20:.0f},"
+                  f"cycles={got:.0f};paper={paper[scheme]};"
+                  f"ratio={got/paper[scheme]:.2f}")
+        print(f"table1/{name}/speedup,{elapsed_us/20:.0f},"
+              f"sim={row['speedup']:.1f}x;paper={speedup}x")

@@ -1,0 +1,25 @@
+"""Serve a small model with batched requests (deliverable b, serving kind).
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Thin wrapper over the production serving core (repro.launch.serve): admits a
+wave of 8 requests with ragged prompt lengths (padded to the wave max),
+prefills them batched, then decodes 24 tokens with greedy sampling,
+reporting per-phase token throughput.
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main([
+        "--arch", "gemma2-2b-smoke",
+        "--requests", "8",
+        "--prompt-len", "24",
+        "--gen", "24",
+        "--temperature", "0.0",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""End-to-end driver: train a ~100M-param LM with the FractalSync BSP stack.
+
+    PYTHONPATH=src python examples/train_lm.py \
+        [--params 100] [--steps 300] [--devices 8] [--schedule fractal]
+
+Uses a llama-style config scaled to the requested size, the explicit-BSP
+train step (fractal gradient schedule + fsync barrier + ZeRO-1), synthetic
+data, async checkpointing, and straggler tracking.  On this CPU container
+``--params 30 --steps 200`` finishes in ~25 min; the 100M/300-step run is
+the full deliverable command (same code path, more wall time).
+"""
+
+import argparse
+import dataclasses
+import os
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--params", type=float, default=100.0,
+                    help="target size in millions")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--schedule", default="fractal")
+    ap.add_argument("--compression", default="none")
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args(argv)
+
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.devices} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import ArchConfig
+    from repro.core.bsp import BSPConfig
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.launch.mesh import make_mesh
+    from repro.models import transformer as T
+    from repro.models.registry import count_params
+    from repro.optim import adamw
+    from repro.runtime import trainer
+    from repro.runtime.loop import LoopConfig, TrainLoop, resume_or_init
+
+    # scale a llama-style config to ~args.params million parameters
+    d = 256
+    layers = 4
+    vocab = 8192
+    while True:
+        cfg = ArchConfig(
+            name=f"repro-lm-{args.params:.0f}m", family="dense",
+            num_layers=layers, d_model=d, num_heads=max(4, d // 64),
+            num_kv_heads=max(2, d // 128), d_ff=int(d * 8 / 3) // 64 * 64,
+            vocab_size=vocab, head_dim=64, max_seq=args.seq,
+            param_dtype="float32")
+        if count_params(cfg) >= args.params * 1e6:
+            break
+        if layers < 12:
+            layers += 2
+        else:
+            d += 128
+    n = count_params(cfg)
+    print(f"config: {cfg.num_layers}L d={cfg.d_model} ff={cfg.d_ff} "
+          f"vocab={vocab} → {n/1e6:.1f}M params")
+
+    mesh = make_mesh((args.devices, 1), ("data", "model"))
+    acfg = adamw.AdamWConfig(lr=3e-4, warmup_steps=20,
+                             total_steps=args.steps, grad_clip=1.0)
+    params = T.init_params(cfg, jax.random.key(0))
+    bsp = BSPConfig(sync_axes=("data",), schedule=args.schedule,
+                    compression=args.compression)
+    step_fn, init_state = trainer.make_bsp_train_step(cfg, mesh, acfg, bsp)
+    state = init_state(params)
+    state, start = resume_or_init(args.checkpoint_dir, state)
+
+    data = SyntheticLM(cfg, DataConfig(global_batch=args.batch,
+                                       seq_len=args.seq))
+    bshard = {"tokens": NamedSharding(mesh, P("data", None)),
+              "labels": NamedSharding(mesh, P("data", None))}
+    loop = TrainLoop(
+        step_fn=step_fn, state=state, data=data,
+        cfg=LoopConfig(total_steps=args.steps, checkpoint_every=50,
+                       log_every=10, checkpoint_dir=args.checkpoint_dir),
+        batch_shardings=bshard, start_step=start)
+    out = loop.run()
+    hist = out["history"]
+    if hist:
+        print(f"steps {hist[0]['step']}..{hist[-1]['step']}: "
+              f"loss {hist[0]['loss']:.4f} → {hist[-1]['loss']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

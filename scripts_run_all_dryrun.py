@@ -1,0 +1,16 @@
+"""Run all dry-run cells cheap-first (resumable; skips cached)."""
+import subprocess, sys, os, itertools
+CHEAP = ["qwen2.5-3b", "phi4-mini-3.8b", "gemma2-2b", "musicgen-medium",
+         "paligemma-3b", "xlstm-1.3b", "granite-34b", "jamba-v0.1-52b",
+         "qwen3-moe-235b-a22b", "deepseek-v3-671b"]
+SHAPES = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
+cells = []
+for shape in SHAPES:
+    for arch in CHEAP:
+        for mesh in ("single", "multi"):
+            cells.append((arch, shape, mesh))
+env = dict(os.environ); env["PYTHONPATH"] = "src"
+for arch, shape, mesh in cells:
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--cell",
+           f"{arch}:{shape}", "--mesh", mesh]
+    r = subprocess.run(cmd, env=env, cwd="/root/repo")

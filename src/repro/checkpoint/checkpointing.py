@@ -1,0 +1,169 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-K, exact resume.
+
+Production behaviors implemented (and tested in tests/test_checkpoint.py):
+
+  * **atomic**: write to ``step_N.tmp-<nonce>`` then ``os.replace`` — a crash
+    mid-save never corrupts the latest checkpoint;
+  * **async**: device→host transfer happens on the caller thread (cheap),
+    serialization + fsync on a background thread so the train loop keeps
+    stepping (BSP supersteps are not blocked on the filesystem);
+  * **keep-K** sliding retention + a permanent ``keep_every`` ladder;
+  * **exact resume**: params, optimizer moments, data-pipeline step and RNG
+    are restored so the continued loss curve is bit-identical (tested);
+  * **integrity**: content checksum verified on load; partial/corrupt files
+    are skipped and the previous step is used (crash-during-save recovery).
+
+Format: one msgpack file per checkpoint holding flattened arrays + a pytree
+structure descriptor (no pickle — robust across refactors and safe to load).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import threading
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)\.ckpt$")
+
+
+def _flatten(tree) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+def _serialize(leaves: List[np.ndarray], meta: dict) -> bytes:
+    payload = {
+        "meta": meta,
+        "arrays": [
+            {"dtype": str(a.dtype), "shape": list(a.shape),
+             "data": a.tobytes()} for a in leaves
+        ],
+    }
+    blob = msgpack.packb(payload, use_bin_type=True)
+    digest = hashlib.sha256(blob).hexdigest().encode()
+    return digest + b"\n" + blob
+
+
+def _deserialize(raw: bytes) -> Tuple[List[np.ndarray], dict]:
+    digest, _, blob = raw.partition(b"\n")
+    if hashlib.sha256(blob).hexdigest().encode() != digest:
+        raise IOError("checkpoint checksum mismatch")
+    payload = msgpack.unpackb(blob, raw=False)
+    leaves = [
+        np.frombuffer(a["data"], dtype=a["dtype"]).reshape(a["shape"]).copy()
+        for a in payload["arrays"]
+    ]
+    return leaves, payload["meta"]
+
+
+@dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    keep_every: int = 0          # additionally keep every Nth step forever
+
+    def __post_init__(self):
+        self.dir = Path(self.directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._lock = threading.Lock()
+        self._pending: Optional[threading.Thread] = None
+        self._errors: List[str] = []
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, state, meta: Optional[dict] = None,
+             blocking: bool = False) -> None:
+        """Snapshot ``state`` (device→host now, disk write async)."""
+        leaves, treedef = _flatten(state)
+        meta = dict(meta or {}, step=int(step), treedef=str(treedef),
+                    time=time.time())
+        raw = None
+
+        def write():
+            nonlocal raw
+            try:
+                raw = _serialize(leaves, meta)
+                tmp = self.dir / f"step_{step}.tmp-{os.getpid()}"
+                with open(tmp, "wb") as f:
+                    f.write(raw)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, self.dir / f"step_{step}.ckpt")
+                self._gc()
+            except Exception as e:   # pragma: no cover
+                self._errors.append(f"save {step}: {e}")
+
+        self.wait()
+        if blocking:
+            write()
+        else:
+            self._pending = threading.Thread(target=write, daemon=True)
+            self._pending.start()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+        if self._errors:
+            errs, self._errors = self._errors, []
+            raise IOError("; ".join(errs))
+
+    # ------------------------------------------------------------------ load
+
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.dir.iterdir():
+            m = _STEP_RE.match(p.name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, like, step: Optional[int] = None):
+        """Restore into the structure/dtypes of ``like``; skips corrupt files
+        (falls back to the previous step). Returns (state, meta) or None."""
+        candidates = self.steps()
+        if step is not None:
+            candidates = [s for s in candidates if s == step]
+        for s in reversed(candidates):
+            try:
+                raw = (self.dir / f"step_{s}.ckpt").read_bytes()
+                leaves, meta = _deserialize(raw)
+            except Exception:
+                continue
+            _, treedef = jax.tree_util.tree_flatten(like)
+            ref_leaves = treedef.flatten_up_to(like)
+            if len(ref_leaves) != len(leaves):
+                continue
+            cast = [np.asarray(l).astype(r.dtype) if hasattr(r, "dtype") else l
+                    for l, r in zip(leaves, ref_leaves)]
+            return jax.tree_util.tree_unflatten(treedef, cast), meta
+        return None
+
+    # ------------------------------------------------------------------ gc
+
+    def _gc(self) -> None:
+        with self._lock:
+            steps = self.steps()
+            protected = {s for s in steps
+                         if self.keep_every and s % self.keep_every == 0}
+            victims = [s for s in steps if s not in protected][:-self.keep] \
+                if self.keep else []
+            for s in victims:
+                try:
+                    (self.dir / f"step_{s}.ckpt").unlink()
+                except OSError:
+                    pass

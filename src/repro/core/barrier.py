@@ -1,0 +1,125 @@
+"""fsync(level): programmable synchronization domains (paper §3.2).
+
+The paper extends the tile ISA with a single instruction, ``fsync(level)``:
+synchronize with every PE under the level-``level`` node of the synchronization
+tree.  Disjoint subtrees (synchronization domains) proceed independently; a
+level mismatch between neighbors raises the FS module's *error* signal.
+
+JAX mapping:
+
+  * ``SyncDomainMesh`` wraps a ``jax.sharding.Mesh`` plus a ``FractalTree``
+    over its synchronization axes (the data-parallel axes; the "model" axis is
+    inside a BSP rank).  It resolves a *level* to the tuple of mesh sub-axes
+    that participate.
+  * ``fsync(level)`` inside ``shard_map``: a recursive-doubling token barrier
+    over the domain (``collectives.fractal_barrier``).  The returned token ==
+    domain size; downstream ops data-depend on it via ``barrier_tie``.
+  * Level-mismatch detection is a host-side check: ``SyncScope`` records the
+    level each superstep requests per domain and raises ``FSyncError`` on
+    conflicting concurrent levels (the paper's *error* wire).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .collectives import fractal_barrier
+from .tree import FractalTree
+
+
+class FSyncError(RuntimeError):
+    """Synchronization-level mismatch (paper: the FS module's *error* signal)."""
+
+
+@dataclass(frozen=True)
+class SyncDomainMesh:
+    """A device mesh with an H-tree synchronization hierarchy over its
+    data-parallel axes.
+
+    ``sync_axes`` are mesh axis names ordered outermost-first (e.g.
+    ``("pod", "data")``); the flattened product forms the tree's leaves with
+    the innermost axis merging first (neighbors first, pods last).
+    """
+
+    mesh: jax.sharding.Mesh
+    sync_axes: Tuple[str, ...]
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(self.mesh.shape[a] for a in self.sync_axes)
+
+    @property
+    def world(self) -> int:
+        return math.prod(self.sizes)
+
+    @property
+    def tree(self) -> FractalTree:
+        return FractalTree(self.sizes)
+
+    @property
+    def num_levels(self) -> int:
+        return self.tree.num_levels
+
+    def domain_size(self, level: Optional[int] = None) -> int:
+        level = self.num_levels if level is None else level
+        return 1 << level
+
+    def fsync(self, level: Optional[int] = None, token=None) -> jax.Array:
+        """Issue the barrier (must run inside shard_map over ``sync_axes``).
+
+        Returns the sync token (== domain size, asserted in tests)."""
+        return fractal_barrier(self.sync_axes, self.sizes, level=level,
+                               token=token)
+
+
+def barrier_tie(x: jax.Array, token: jax.Array) -> jax.Array:
+    """Make ``x`` data-depend on a barrier token without changing its value.
+
+    ``optimization_barrier`` stops XLA from sinking work across the BSP
+    superstep boundary (the compiled analogue of 'wake gates the next
+    instruction')."""
+    x, _ = jax.lax.optimization_barrier((x, token))
+    return x
+
+
+@dataclass
+class SyncScope:
+    """Host-side bookkeeping of concurrently-active fsync levels.
+
+    The paper's FS module flags an *error* when its two slave ports request
+    different levels.  In SPMD JAX a single program cannot diverge, but a
+    *runtime* composing per-domain programs can: this scope performs the
+    equivalent check when supersteps are scheduled (see runtime/trainer.py).
+    """
+
+    mesh: SyncDomainMesh
+    active: Dict[Tuple[int, ...], int] = field(default_factory=dict)
+
+    def request(self, domain_key: Tuple[int, ...], level: int) -> None:
+        tree = self.mesh.tree
+        if not 0 <= level <= tree.num_levels:
+            raise FSyncError(f"level {level} outside 0..{tree.num_levels}")
+        for other_key, other_level in self.active.items():
+            # two concurrent requests conflict if one domain contains the
+            # other but the levels disagree (mismatched subtree roots)
+            lo, hi = sorted((level, other_level))
+            a, b = (domain_key, other_key) if level <= other_level \
+                else (other_key, domain_key)
+            # project the smaller domain's key up to the larger level
+            if _project(self.mesh.tree, a, hi) == b and lo != hi:
+                raise FSyncError(
+                    f"fsync level mismatch: domain {domain_key} at level "
+                    f"{level} vs domain {other_key} at level {other_level}")
+        self.active[domain_key] = level
+
+    def complete(self, domain_key: Tuple[int, ...]) -> None:
+        self.active.pop(domain_key, None)
+
+
+def _project(tree: FractalTree, key: Tuple[int, ...], level: int) -> Tuple[int, ...]:
+    return tree.domain_key(key, level)

@@ -1,0 +1,143 @@
+"""Bulk Synchronous Parallel superstep runtime (paper §1, Valiant's BSP).
+
+BSP structures parallel execution as *supersteps*: (1) local computation,
+(2) communication, (3) global barrier.  The paper's whole point is making (3)
+cheap and scalable; its only synchronization primitive is the barrier.
+
+This module gives the training/serving stack a BSP-shaped API whose
+communication phase runs one of the FractalSync-family schedules:
+
+  * ``sync_gradients``  — flatten a gradient pytree, pad, all-reduce with the
+    configured schedule (fractal | ring | xy | naive | hierarchical | xla),
+    optionally compressing exchanged payloads, then mean + unflatten.
+  * ``superstep``       — compute → communicate → fsync barrier, with the
+    barrier token tied into the outputs (``barrier_tie``) so XLA cannot blur
+    the superstep boundary.
+
+Everything here runs *inside* ``shard_map`` over the sync axes; the "model"
+axis stays in GSPMD's hands (``auto``), which is how per-rank local compute
+keeps its tensor parallelism.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from . import collectives
+from .barrier import barrier_tie
+from .collectives import fractal_barrier
+
+
+@dataclass(frozen=True)
+class BSPConfig:
+    """How a BSP step synchronizes.
+
+    sync_axes   : mesh axes forming the synchronization tree, outermost first
+                  (e.g. ("pod","data")); their product is the BSP world.
+    schedule    : gradient all-reduce schedule (see collectives.SCHEDULES).
+    compression : payload codec for the fractal schedule ("none"|"bf16"|"int8").
+    fsync_level : barrier scope (None = root = whole world); lower levels
+                  synchronize only a subtree (paper §3.2 domains).
+    pad_align   : flat gradient vector padded to lcm(world, pad_align) so the
+                  halving steps stay lane-aligned on TPU (128 lanes).
+    """
+
+    sync_axes: Tuple[str, ...] = ("data",)
+    schedule: str = "fractal"
+    compression: str = "none"
+    fsync_level: Optional[int] = None
+    pad_align: int = 128
+
+    def __post_init__(self):
+        if self.schedule not in collectives.SCHEDULES:
+            raise ValueError(f"unknown schedule {self.schedule!r}")
+
+
+def _world(sizes: Sequence[int]) -> int:
+    return math.prod(sizes)
+
+
+def _padded_len(n: int, world: int, align: int) -> int:
+    # world*align so even the smallest halved payload (n/world after the last
+    # reduce-scatter step) stays lane/compression-block aligned
+    unit = world * align
+    return ((n + unit - 1) // unit) * unit
+
+
+def make_codec(name: str):
+    if name in (None, "none"):
+        return None
+    from repro.optim.compression import Bf16Codec, Int8Codec
+    if name == "bf16":
+        return Bf16Codec()
+    if name == "int8":
+        return Int8Codec()
+    raise ValueError(f"unknown compression {name!r}")
+
+
+def sync_gradients(grads, cfg: BSPConfig, sizes: Sequence[int],
+                   mean: bool = True):
+    """All-reduce a gradient pytree with the configured schedule.
+
+    Must be called inside ``shard_map`` over ``cfg.sync_axes``.  Returns the
+    synchronized pytree (mean over the BSP world by default).
+    """
+    world = _world(sizes)
+    if world == 1:
+        return grads
+    flat, unravel = ravel_pytree(grads)
+    n = flat.shape[0]
+    padded = _padded_len(n, world, cfg.pad_align)
+    if padded != n:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((padded - n,), flat.dtype)])
+
+    codec = make_codec(cfg.compression)
+    if cfg.schedule == "fractal":
+        flat = collectives.fractal_all_reduce(flat, cfg.sync_axes, sizes,
+                                              codec=codec)
+    else:
+        flat = collectives.all_reduce(flat, cfg.schedule, cfg.sync_axes, sizes)
+    if mean:
+        flat = flat / world
+    return unravel(flat[:n])
+
+
+def superstep(compute: Callable, communicate: Callable, cfg: BSPConfig,
+              sizes: Sequence[int]):
+    """Build one BSP superstep: local compute → communicate → fsync barrier.
+
+    ``compute(*args)`` runs rank-local work; ``communicate(result)`` runs the
+    communication phase (e.g. ``sync_gradients``); the returned callable ties
+    the fsync token into every output leaf so the barrier orders supersteps.
+    """
+
+    def step(*args):
+        local = compute(*args)
+        exchanged = communicate(local)
+        token = fractal_barrier(cfg.sync_axes, sizes, level=cfg.fsync_level)
+        return jax.tree.map(lambda leaf: barrier_tie(leaf, token), exchanged)
+
+    return step
+
+
+def bsp_shard_map(fn: Callable, mesh: jax.sharding.Mesh,
+                  in_specs, out_specs, sync_axes: Tuple[str, ...],
+                  auto_axes: Tuple[str, ...] = ("model",)):
+    """shard_map over the sync axes with the remaining axes left to GSPMD.
+
+    This is the composition that lets the paper's explicit synchronization
+    schedule coexist with XLA-managed tensor parallelism inside each rank.
+    In jax 0.8 ``axis_names`` lists the axes shard_map handles *manually*;
+    every other mesh axis (e.g. "model") stays auto (GSPMD).
+    """
+    del auto_axes  # everything not in sync_axes is auto by construction
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False,
+                         axis_names=frozenset(sync_axes))

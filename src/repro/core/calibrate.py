@@ -1,0 +1,131 @@
+"""Calibrate the AMO-baseline simulator parameters against paper Table 1.
+
+The FractalSync columns of Table 1 are parameter-free (exact from topology).
+The Naïve/XY software-AMO baselines depend on micro-architectural constants the
+paper does not publish (AMO service time, NoC per-hop latency, software loop
+overheads).  We fit those by randomized search + coordinate descent against the
+nine distinct published numbers:
+
+    Naïve: 79 (Neighbor), 119 (2×2), 512 (4×4), 2488 (8×8), 13961 (16×16)
+    XY:                    219 (2×2), 347 (4×4),  614 (8×8),  1462 (16×16)
+
+Loss = mean squared log-ratio (scale-aware, symmetric).  The fitted parameters
+are frozen into ``simulator.DEFAULT_PARAMS`` and the residuals are reported in
+EXPERIMENTS.md §Table-1.
+
+Run:  PYTHONPATH=src python -m repro.core.calibrate [--iters N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import random
+import sys
+
+from .simulator import (DEFAULT_PARAMS, NaiveBarrier, PAPER_TABLE1,
+                        SimBudgetExceeded, SimParams, XYBarrier, _mesh_of)
+
+PENALTY = 1e6  # loss for configs that blow the simulation budget
+
+TARGETS = []
+for name, (_, _, naive, xy, _) in PAPER_TABLE1.items():
+    TARGETS.append((name, "naive", naive))
+    if name != "Neighbor":  # XY degenerates to Naive for 2 tiles
+        TARGETS.append((name, "xy", xy))
+
+SEARCH_SPACE = {
+    "hop_latency": (1, 6),
+    "link_occupancy": (1, 3),
+    "inj_latency": (0, 5),
+    "amo_service": (1, 24),
+    "sw_pre": (0, 40),
+    "sw_between": (0, 24),
+    "sw_poll": (4, 40),   # ≥4: bounds poll-storm event counts
+    "sw_post": (0, 16),
+}
+
+
+def evaluate(params: SimParams) -> tuple[float, dict]:
+    sims = {}
+    try:
+        # cheap meshes first so pathological configs fail fast
+        for name in sorted(PAPER_TABLE1, key=lambda n: _mesh_of(n)[0] *
+                           _mesh_of(n)[1]):
+            rows, cols = _mesh_of(name)
+            sims[(name, "naive")] = NaiveBarrier(rows, cols, params).run()
+            if name != "Neighbor":
+                sims[(name, "xy")] = XYBarrier(rows, cols, params).run()
+    except SimBudgetExceeded:
+        return PENALTY, sims
+    loss = 0.0
+    for name, scheme, target in TARGETS:
+        got = sims[(name, scheme)]
+        loss += math.log(got / target) ** 2
+    return loss / len(TARGETS), sims
+
+
+def random_params(rng: random.Random) -> SimParams:
+    return SimParams(**{k: rng.randint(lo, hi) for k, (lo, hi) in SEARCH_SPACE.items()})
+
+
+def neighbors(p: SimParams, rng: random.Random, step: int = 1):
+    for k, (lo, hi) in SEARCH_SPACE.items():
+        v = getattr(p, k)
+        for dv in (-step, step):
+            nv = min(hi, max(lo, v + dv))
+            if nv != v:
+                yield dataclasses.replace(p, **{k: nv})
+
+
+def search(iters: int = 200, seed: int = 0, start: SimParams | None = None):
+    rng = random.Random(seed)
+    best_p = start or DEFAULT_PARAMS
+    best_loss, _ = evaluate(best_p)
+    # Phase 1: random restarts
+    for i in range(iters):
+        p = random_params(rng)
+        loss, _ = evaluate(p)
+        if loss < best_loss:
+            best_loss, best_p = loss, p
+            print(f"[random {i}] loss={loss:.4f} {p}", flush=True)
+    # Phase 2: coordinate descent from the best point
+    improved = True
+    while improved:
+        improved = False
+        for cand in neighbors(best_p, rng):
+            loss, _ = evaluate(cand)
+            if loss < best_loss - 1e-9:
+                best_loss, best_p = loss, cand
+                improved = True
+                print(f"[descend] loss={loss:.4f} {cand}", flush=True)
+    return best_p, best_loss
+
+
+def report(params: SimParams) -> str:
+    loss, sims = evaluate(params)
+    lines = [f"params = {params}", f"mean sq log-ratio loss = {loss:.4f}", ""]
+    lines.append(f"{'mesh':<9s} {'scheme':<6s} {'paper':>7s} {'sim':>7s} {'ratio':>6s}")
+    for name, scheme, target in TARGETS:
+        got = sims[(name, scheme)]
+        lines.append(f"{name:<9s} {scheme:<6s} {target:>7d} {got:>7d} {got/target:>6.2f}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=str, default="results/calibration.json")
+    args = ap.parse_args(argv)
+    best_p, best_loss = search(args.iters, args.seed)
+    print(report(best_p))
+    with open(args.out, "w") as f:
+        json.dump({"params": dataclasses.asdict(best_p), "loss": best_loss}, f,
+                  indent=2)
+
+
+if __name__ == "__main__":
+    main()

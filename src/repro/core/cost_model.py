@@ -1,0 +1,128 @@
+"""α-β (latency-bandwidth) cost model for synchronization/collective schedules.
+
+Carries two parameter sets (DESIGN.md §7):
+
+  * ``MAGIA``: the paper's system — 1 GHz tiles, 1-cycle NoC hops, pure-control
+    barriers (payload ≈ 0) → latency-dominated, which is why the H-tree's
+    O(log N) beats XY's O(k) and Naïve's O(N) (Table 1).
+  * ``TPU_V5E``: our target — 197 bf16 TFLOP/s/chip, 819 GB/s HBM,
+    ~50 GB/s/link ICI, ~1 µs software-visible collective launch latency.
+    Barriers ride on gradient collectives, so both α (latency) and β
+    (bytes/bandwidth) terms matter.
+
+The model prices the schedules implemented in ``core/collectives.py``; the
+benchmarks use it to (a) project Table 1 to pod scale and (b) napkin-math the
+§Perf hillclimb hypotheses before each change.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class LinkParams:
+    alpha_s: float          # per-step latency (s): hop/launch overhead
+    bw_Bps: float           # per-link bandwidth, bytes/s
+    name: str = "link"
+
+
+MAGIA = LinkParams(alpha_s=1e-9, bw_Bps=4e9, name="magia-noc")      # 1 cycle @1GHz, 32bit@1GHz
+TPU_V5E_ICI = LinkParams(alpha_s=1e-6, bw_Bps=50e9, name="v5e-ici")
+TPU_DCN = LinkParams(alpha_s=10e-6, bw_Bps=25e9, name="dcn")        # inter-pod
+
+
+@dataclass(frozen=True)
+class ChipParams:
+    peak_flops: float = 197e12     # bf16
+    hbm_Bps: float = 819e9
+    hbm_GiB: float = 16.0
+    name: str = "tpu-v5e"
+
+
+TPU_V5E = ChipParams()
+
+
+# ---------------------------------------------------------------------------
+# All-reduce schedule costs for N devices, V bytes per device
+# ---------------------------------------------------------------------------
+
+
+def ring_all_reduce(n: int, vol_B: float, link: LinkParams) -> float:
+    """Dimension-flat ring: 2(n−1) steps, bandwidth-optimal: 2·V·(n−1)/n."""
+    if n <= 1:
+        return 0.0
+    return 2 * (n - 1) * link.alpha_s + 2 * vol_B * (n - 1) / n / link.bw_Bps
+
+
+def fractal_all_reduce(n: int, vol_B: float, link: LinkParams) -> float:
+    """Recursive halving-doubling (the H-tree/butterfly schedule):
+    reduce-scatter by halves (log n steps, V(n−1)/n bytes) then all-gather by
+    doubles.  Latency-optimal (2·log n steps) AND bandwidth-optimal."""
+    if n <= 1:
+        return 0.0
+    steps = 2 * math.log2(n)
+    return steps * link.alpha_s + 2 * vol_B * (n - 1) / n / link.bw_Bps
+
+
+def xy_all_reduce(kx: int, ky: int, vol_B: float, link: LinkParams) -> float:
+    """Dimension-ordered (paper's XY baseline): ring along x then along y.
+    Latency O(kx+ky); bandwidth 2·V·[(kx−1)/kx + (ky−1)/ky]."""
+    return ring_all_reduce(kx, vol_B, link) + ring_all_reduce(ky, vol_B, link)
+
+
+def naive_all_reduce(n: int, vol_B: float, link: LinkParams) -> float:
+    """Gather-to-root + broadcast (paper's Naïve): root port serializes n−1
+    ingress and n−1 egress transfers of V bytes."""
+    if n <= 1:
+        return 0.0
+    return 2 * (n - 1) * (link.alpha_s + vol_B / link.bw_Bps)
+
+
+def hierarchical_all_reduce(n_inner: int, n_outer: int, vol_B: float,
+                            inner: LinkParams, outer: LinkParams) -> float:
+    """The fractal idea at pod granularity: intra-pod reduce-scatter,
+    inter-pod all-reduce over V/n_inner shards, intra-pod all-gather."""
+    if n_inner <= 1:
+        return fractal_all_reduce(n_outer, vol_B, outer)
+    rs = math.log2(n_inner) * inner.alpha_s + vol_B * (n_inner - 1) / n_inner / inner.bw_Bps
+    mid = fractal_all_reduce(n_outer, vol_B / n_inner, outer)
+    ag = math.log2(n_inner) * inner.alpha_s + vol_B * (n_inner - 1) / n_inner / inner.bw_Bps
+    return rs + mid + ag
+
+
+def barrier_cost(n: int, link: LinkParams, schedule: str = "fractal") -> float:
+    """Pure-control barrier (payload→0): only the α terms survive. This is the
+    regime of the paper, where the H-tree's 2·log2(N) steps win."""
+    if schedule == "fractal":
+        return 2 * math.log2(n) * link.alpha_s
+    if schedule == "xy":
+        k = int(round(math.sqrt(n)))
+        return 2 * (k - 1) * 2 * link.alpha_s
+    if schedule == "naive":
+        return 2 * (n - 1) * link.alpha_s
+    if schedule == "ring":
+        return 2 * (n - 1) * link.alpha_s
+    raise ValueError(schedule)
+
+
+def schedule_cost(schedule: str, n: int, vol_B: float, link: LinkParams,
+                  mesh_xy: tuple[int, int] | None = None) -> float:
+    if schedule == "fractal":
+        return fractal_all_reduce(n, vol_B, link)
+    if schedule == "ring":
+        return ring_all_reduce(n, vol_B, link)
+    if schedule == "naive":
+        return naive_all_reduce(n, vol_B, link)
+    if schedule == "xy":
+        kx, ky = mesh_xy or _square(n)
+        return xy_all_reduce(kx, ky, vol_B, link)
+    raise ValueError(schedule)
+
+
+def _square(n: int) -> tuple[int, int]:
+    k = int(round(math.sqrt(n)))
+    if k * k != n:
+        raise ValueError(f"{n} is not square; pass mesh_xy explicitly")
+    return k, k

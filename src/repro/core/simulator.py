@@ -1,0 +1,483 @@
+"""Cycle-accurate discrete-event simulator of MAGIA synchronization (paper §4.1).
+
+Reproduces Table 1: the latency of four barrier schemes on tile meshes from
+*Neighbor* (two adjacent tiles) up to 16×16:
+
+  * **FSync**    — native FractalSync H-tree (dedicated wires, no NoC traffic).
+  * **FSync+P**  — FractalSync with pipeline registers on wires longer than one
+                   NoC pitch (closes 1 GHz timing; paper's headline scheme).
+  * **Naïve**    — software barrier via atomic memory operations (AMOs) to a
+                   single master tile over the NoC: fetch-add a counter, last
+                   arriver writes a release flag, everyone else spin-polls it.
+  * **XY**       — dimension-ordered software barrier: each row barriers on its
+                   row-master (phase 1), row-masters barrier on the global
+                   master (phase 2), release cascades back. Linear scaling.
+
+The NoC model is an XY-routed 2D mesh with contended links (1-flit messages,
+store-and-forward, per-hop latency + link occupancy) and a per-tile AMO unit
+that serializes atomic operations (models MAGIA's HCI AMO module). Software
+overheads (issue, poll loop, exit) are parameters; ``DEFAULT_PARAMS`` was
+calibrated against Table 1 (see ``core/calibrate.py`` and EXPERIMENTS.md).
+
+Synchronization overhead metric (paper §4.1):  Ŝ := max(F) − max(R), where R
+are the cycles at which tiles request synchronization and F the cycles at which
+they execute the instruction following synchronization.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from collections import defaultdict
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .tree import FractalTree
+
+Coord = Tuple[int, int]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SimParams:
+    """Micro-architectural + software constants (cycles @ 1 GHz).
+
+    Calibrated against the paper's Table 1 AMO baselines (16 KiB I$, cache
+    pre-heating). The FractalSync columns are parameter-free (pure topology).
+    """
+
+    hop_latency: int = 4        # router→router traversal (FlooNoC-like)
+    link_occupancy: int = 3     # cycles a 1-flit msg holds a link
+    inj_latency: int = 0        # tile↔router network-interface latency
+    amo_service: int = 11       # AMO unit service time per op (HCI + bank)
+    sw_pre: int = 0             # sync request → first AMO issued
+    sw_between: int = 17        # gap between dependent ops in SW
+    sw_poll: int = 22           # spin-loop overhead between polls
+    sw_post: int = 3            # release observed → next instruction retires
+
+
+DEFAULT_PARAMS = SimParams()
+
+
+# ---------------------------------------------------------------------------
+# Event engine
+# ---------------------------------------------------------------------------
+
+
+class SimBudgetExceeded(RuntimeError):
+    """Simulation ran past its cycle/event budget (pathological parameters)."""
+
+
+class EventSim:
+    """Minimal deterministic discrete-event engine."""
+
+    def __init__(self) -> None:
+        self.now = 0
+        self._q: List[Tuple[int, int, Callable[[int], None]]] = []
+        self._seq = itertools.count()
+
+    def at(self, time: int, fn: Callable[[int], None]) -> None:
+        if time < self.now:
+            raise RuntimeError(f"scheduling into the past: {time} < {self.now}")
+        heapq.heappush(self._q, (time, next(self._seq), fn))
+
+    def run(self, horizon: int = 200_000, max_events: int = 2_000_000) -> None:
+        events = 0
+        while self._q:
+            t, _, fn = heapq.heappop(self._q)
+            events += 1
+            if t > horizon or events > max_events:
+                raise SimBudgetExceeded(
+                    f"simulation exceeded budget (t={t}, events={events})")
+            self.now = t
+            fn(t)
+
+
+# ---------------------------------------------------------------------------
+# NoC: XY-routed 2D mesh with contended links
+# ---------------------------------------------------------------------------
+
+
+class NoC:
+    """XY dimension-ordered routing, single physical channel (paper §2.2).
+
+    Links (incl. tile↔router injection/ejection ports) are modeled as
+    resources with an occupancy window; 1-flit messages advance hop-by-hop.
+    Contention at the master tile's ejection port is what makes centralized
+    AMO barriers quadratic — exactly the effect the paper measures.
+    """
+
+    def __init__(self, sim: EventSim, rows: int, cols: int, p: SimParams):
+        self.sim = sim
+        self.rows, self.cols = rows, cols
+        self.p = p
+        self.link_free: Dict[tuple, int] = defaultdict(int)
+        self.total_msgs = 0
+        self.total_hops = 0
+
+    def _path(self, src: Coord, dst: Coord) -> List[tuple]:
+        """List of (link_key, latency) from src tile to dst tile."""
+        links: List[tuple] = [(("inj", src), self.p.inj_latency)]
+        r, c = src
+        while c != dst[1]:
+            nc = c + (1 if dst[1] > c else -1)
+            links.append(((("rtr", (r, c)), ("rtr", (r, nc))), self.p.hop_latency))
+            c = nc
+        while r != dst[0]:
+            nr = r + (1 if dst[0] > r else -1)
+            links.append(((("rtr", (r, c)), ("rtr", (nr, c))), self.p.hop_latency))
+            r = nr
+        links.append((("ej", dst), self.p.inj_latency))
+        return links
+
+    def send(self, t: int, src: Coord, dst: Coord,
+             on_deliver: Callable[[int], None]) -> None:
+        """Inject a 1-flit message at time t; call on_deliver at arrival."""
+        assert src != dst, "local operations must not use the NoC"
+        path = self._path(src, dst)
+        self.total_msgs += 1
+        self.total_hops += len(path) - 2
+
+        def advance(i: int, t: int) -> None:
+            if i == len(path):
+                on_deliver(t)
+                return
+            key, lat = path[i]
+            free = self.link_free[key]
+            if free > t:
+                self.sim.at(free, lambda tt: advance(i, tt))
+                return
+            self.link_free[key] = t + self.p.link_occupancy
+            self.sim.at(t + lat, lambda tt: advance(i + 1, tt))
+
+        advance(0, t)
+
+
+# ---------------------------------------------------------------------------
+# AMO unit (per tile): serializes atomic ops on that tile's L1
+# ---------------------------------------------------------------------------
+
+
+class AMOUnit:
+    def __init__(self, sim: EventSim, p: SimParams):
+        self.sim = sim
+        self.p = p
+        self.busy_until = 0
+        self.mem: Dict[str, int] = defaultdict(int)
+        self.ops_served = 0
+
+    def request(self, t: int, op: str, addr: str, val: int,
+                reply: Callable[[int, int], None]) -> None:
+        """op ∈ {fetch_add, read, write}; reply(time, old_value)."""
+        start = max(t, self.busy_until)
+        done = start + self.p.amo_service
+        self.busy_until = done
+        self.ops_served += 1
+
+        def fire(tt: int) -> None:
+            old = self.mem[addr]
+            if op == "fetch_add":
+                self.mem[addr] = old + val
+            elif op == "write":
+                self.mem[addr] = val
+            elif op != "read":
+                raise ValueError(op)
+            reply(tt, old)
+
+        self.sim.at(done, fire)
+
+
+# ---------------------------------------------------------------------------
+# Software AMO barrier schemes (the paper's baselines)
+# ---------------------------------------------------------------------------
+
+
+class _AMOMachine:
+    """Shared plumbing: issue an AMO op to a (possibly remote) tile."""
+
+    def __init__(self, rows: int, cols: int, p: SimParams):
+        self.rows, self.cols = rows, cols
+        self.p = p
+        self.sim = EventSim()
+        self.noc = NoC(self.sim, rows, cols, p)
+        self.amo = {
+            (r, c): AMOUnit(self.sim, p)
+            for r in range(rows) for c in range(cols)
+        }
+        self.finish: Dict[Coord, int] = {}
+
+    def tiles(self) -> List[Coord]:
+        return [(r, c) for r in range(self.rows) for c in range(self.cols)]
+
+    def amo_op(self, t: int, src: Coord, dst: Coord, op: str, addr: str,
+               val: int, reply: Callable[[int, int], None]) -> None:
+        """Round-trip AMO: NoC request → AMO unit → NoC response (or local)."""
+        unit = self.amo[dst]
+        if src == dst:
+            unit.request(t, op, addr, val, reply)
+            return
+
+        def deliver_req(tt: int) -> None:
+            unit.request(tt, op, addr, val,
+                         lambda td, old: self.noc.send(
+                             td, dst, src, lambda ta: reply(ta, old)))
+
+        self.noc.send(t, src, dst, deliver_req)
+
+    def overhead(self, requests: Dict[Coord, int]) -> int:
+        """Ŝ = max(F) − max(R)."""
+        return max(self.finish.values()) - max(requests.values())
+
+
+class NaiveBarrier(_AMOMachine):
+    """Single master tile accepts requests and dispatches responses (§4.1).
+
+    fetch-add a counter at the master; the arriver that reads N-1 writes the
+    release flag; all others spin-poll the flag over the NoC.
+    """
+
+    def run(self, requests: Optional[Dict[Coord, int]] = None,
+            master: Coord = (0, 0)) -> int:
+        tiles = self.tiles()
+        n = len(tiles)
+        requests = requests or {t: 0 for t in tiles}
+        p = self.p
+
+        def poll(tile: Coord, t: int) -> None:
+            def on_flag(tt: int, flag: int) -> None:
+                if flag:
+                    self.finish[tile] = tt + p.sw_post
+                else:
+                    self.sim.at(tt + p.sw_poll,
+                                lambda t2: poll(tile, t2))
+            self.amo_op(t, tile, master, "read", "flag", 0, on_flag)
+
+        def start(tile: Coord, t: int) -> None:
+            def on_count(tt: int, old: int) -> None:
+                if old == n - 1:  # last arriver: release everyone
+                    def on_release(td: int, _old: int) -> None:
+                        self.finish[tile] = td + p.sw_post
+                    self.amo_op(tt + p.sw_between, tile, master,
+                                "write", "flag", 1, on_release)
+                else:
+                    self.sim.at(tt + p.sw_between,
+                                lambda t2: poll(tile, t2))
+            self.amo_op(t + p.sw_pre, tile, master, "fetch_add", "count", 1,
+                        on_count)
+
+        for tile, r in requests.items():
+            self.sim.at(r, lambda t, tile=tile: start(tile, t))
+        self.sim.run()
+        return self.overhead(requests)
+
+
+class XYBarrier(_AMOMachine):
+    """Two 1D phases: rows barrier on row-masters (col 0), then row-masters
+    barrier on the global master (0,0); release cascades back (§4.1)."""
+
+    def run(self, requests: Optional[Dict[Coord, int]] = None) -> int:
+        tiles = self.tiles()
+        requests = requests or {t: 0 for t in tiles}
+        p = self.p
+        k_cols = self.cols
+        k_rows = self.rows
+        gmaster = (0, 0)
+
+        def poll(tile: Coord, at_tile: Coord, addr: str,
+                 on_set: Callable[[int], None], t: int) -> None:
+            def on_rd(tt: int, v: int) -> None:
+                if v:
+                    on_set(tt)
+                else:
+                    self.sim.at(tt + p.sw_poll,
+                                lambda t2: poll(tile, at_tile, addr, on_set, t2))
+            self.amo_op(t, tile, at_tile, "read", addr, 0, on_rd)
+
+        # ---- phase 2: row masters barrier at global master -----------------
+        def phase2(rm: Coord, t: int) -> None:
+            def on_count(tt: int, old: int) -> None:
+                if old == k_rows - 1:
+                    def on_release(td: int, _o: int) -> None:
+                        release_row(rm, td)
+                    self.amo_op(tt + p.sw_between, rm, gmaster,
+                                "write", "gflag", 1, on_release)
+                else:
+                    self.sim.at(tt + p.sw_between,
+                                lambda t2: poll(rm, gmaster, "gflag",
+                                                lambda td: release_row(rm, td),
+                                                t2))
+            self.amo_op(t + p.sw_between, rm, gmaster, "fetch_add", "gcount",
+                        1, on_count)
+
+        # ---- release: row master writes its local row flag ------------------
+        def release_row(rm: Coord, t: int) -> None:
+            def on_wr(tt: int, _o: int) -> None:
+                self.finish[rm] = tt + p.sw_post
+            self.amo_op(t + p.sw_between, rm, rm, "write", "rflag", 1, on_wr)
+
+        # ---- phase 1: tiles barrier at their row master ----------------------
+        def start(tile: Coord, t: int) -> None:
+            r, c = tile
+            rm = (r, 0)
+            if tile == rm:
+                # Row master spin-polls its LOCAL row counter until the other
+                # k-1 row tiles have arrived, then enters phase 2.
+                def wait_row(tt: int) -> None:
+                    def on_rd(td: int, v: int) -> None:
+                        if v == k_cols - 1:
+                            phase2(rm, td)
+                        else:
+                            self.sim.at(td + p.sw_poll, wait_row)
+                    self.amo_op(tt, rm, rm, "read", "rcount", 0, on_rd)
+                self.sim.at(t + p.sw_pre, wait_row)
+            else:
+                def on_count(tt: int, _old: int) -> None:
+                    self.sim.at(tt + p.sw_between,
+                                lambda t2: poll(tile, rm, "rflag",
+                                                lambda td: self.finish.__setitem__(
+                                                    tile, td + p.sw_post),
+                                                t2))
+                self.amo_op(t + p.sw_pre, tile, rm, "fetch_add", "rcount", 1,
+                            on_count)
+
+        for tile, r in requests.items():
+            self.sim.at(r, lambda t, tile=tile: start(tile, t))
+        self.sim.run()
+        return self.overhead(requests)
+
+
+# ---------------------------------------------------------------------------
+# FractalSync event model (dedicated H-tree network, §3)
+# ---------------------------------------------------------------------------
+
+
+class FractalSyncSim:
+    """Event-driven model of the FS tree with arbitrary arrival skew.
+
+    Up-edge into a level-l module costs 1 cycle (FSM) plus, if pipelined, the
+    level's pipeline registers; the down (wake) path mirrors it; +2 cycles for
+    request sampling and wake detection at the tile.  With aligned arrivals
+    this equals ``FractalTree.fsync_latency`` (Table 1 exactly).
+    """
+
+    def __init__(self, tree: FractalTree, pipelined: bool = False):
+        self.tree = tree
+        self.pipelined = pipelined
+
+    def run(self, requests: Optional[Dict[tuple, int]] = None,
+            level: Optional[int] = None) -> Tuple[int, Dict[tuple, int]]:
+        tree = self.tree
+        level = tree.num_levels if level is None else level
+        tiles = list(tree.tiles())
+        requests = requests or {t: 0 for t in tiles}
+
+        # Upward sweep: module at (lvl, key) fires at max(children)+cost(lvl).
+        fire_time: Dict[tuple, int] = {}
+        arrive: Dict[tuple, int] = {("tile", t): requests[t] + 1 for t in tiles}
+        groups: Dict[tuple, List[int]] = defaultdict(list)
+        for t in tiles:
+            groups[tree.domain_key(t, 1)].append(arrive[("tile", t)])
+        prev = {k: v for k, v in groups.items()}
+        for lvl in range(1, level + 1):
+            spec = tree.level(lvl)
+            cost = 1 + (spec.pipeline_regs if self.pipelined else 0)
+            nxt: Dict[tuple, List[int]] = defaultdict(list)
+            fired: Dict[tuple, int] = {}
+            for key, times in prev.items():
+                fired[key] = max(times) + cost
+            fire_time.update({(lvl, k): v for k, v in fired.items()})
+            if lvl < level:
+                for t in tiles:
+                    k_here = tree.domain_key(t, lvl)
+                    k_up = tree.domain_key(t, lvl + 1)
+                    nxt[k_up].append(fired[k_here])
+                # dedupe: each module reports once, not once per tile
+                prev = {k: sorted(set(v)) for k, v in nxt.items()}
+
+        # Downward sweep: wake propagates back through the same edges.
+        down_cost = sum(
+            1 + (tree.level(l).pipeline_regs if self.pipelined else 0)
+            for l in range(1, level + 1)
+        )
+        finish: Dict[tuple, int] = {}
+        for t in tiles:
+            root_key = tree.domain_key(t, level)
+            finish[t] = fire_time[(level, root_key)] + down_cost + 1
+
+        overhead = max(finish.values()) - max(requests.values())
+        return overhead, finish
+
+
+# ---------------------------------------------------------------------------
+# Table 1 driver
+# ---------------------------------------------------------------------------
+
+PAPER_TABLE1 = {
+    # mesh: (FSync, FSync+P, Naive, XY, speedup "FSync+P vs best AMO")
+    "Neighbor": (4, 4, 79, 79, 19),
+    "2x2": (6, 6, 119, 219, 19),
+    "4x4": (10, 10, 512, 347, 34),
+    "8x8": (14, 18, 2488, 614, 34),
+    "16x16": (18, 34, 13961, 1462, 43),
+}
+
+
+def _mesh_of(name: str) -> Tuple[int, int]:
+    if name == "Neighbor":
+        return (1, 2)
+    k = int(name.split("x")[0])
+    return (k, k)
+
+
+def simulate_config(name: str, params: SimParams = DEFAULT_PARAMS
+                    ) -> Dict[str, float]:
+    rows, cols = _mesh_of(name)
+    tree = FractalTree((rows, cols))
+    fsync = tree.fsync_latency()
+    fsync_p = tree.fsync_latency(pipelined=True)
+    naive = NaiveBarrier(rows, cols, params).run()
+    # Paper reports identical Neighbor numbers for Naive and XY (2 tiles: XY
+    # degenerates to the centralized scheme).
+    xy = naive if rows * cols == 2 else XYBarrier(rows, cols, params).run()
+    best_amo = min(naive, xy)
+    return {
+        "fsync": fsync,
+        "fsync_p": fsync_p,
+        "naive": naive,
+        "xy": xy,
+        "best_amo": best_amo,
+        "speedup": best_amo / fsync_p,
+    }
+
+
+def table1(params: SimParams = DEFAULT_PARAMS,
+           configs: Sequence[str] = tuple(PAPER_TABLE1)) -> Dict[str, Dict[str, float]]:
+    return {name: simulate_config(name, params) for name in configs}
+
+
+def scaling_sweep(ks: Sequence[int] = (2, 4, 8, 16, 32, 64),
+                  params: SimParams = DEFAULT_PARAMS,
+                  max_amo_k: int = 16) -> Dict[str, Dict[str, float]]:
+    """Beyond-paper: extend the sweep past 16×16. AMO sims above ``max_amo_k``
+    are skipped (quadratic event counts); FSync columns are analytic."""
+    out: Dict[str, Dict[str, float]] = {}
+    for k in ks:
+        name = f"{k}x{k}"
+        tree = FractalTree((k, k))
+        row: Dict[str, float] = {
+            "fsync": tree.fsync_latency(),
+            "fsync_p": tree.fsync_latency(pipelined=True),
+        }
+        if k <= max_amo_k:
+            row.update(
+                naive=NaiveBarrier(k, k, params).run(),
+                xy=XYBarrier(k, k, params).run(),
+            )
+            row["speedup"] = min(row["naive"], row["xy"]) / row["fsync_p"]
+        out[name] = row
+    return out

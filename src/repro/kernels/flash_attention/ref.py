@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=None):
+    """q: [BH,Tq,D], k/v: [BH,Tk,D(v)] → [BH,Tq,Dv]; dense reference."""
+    BH, Tq, D = q.shape
+    Tk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Tq)[:, None]
+    k_pos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bqk,bkd->bqd", p, v).astype(q.dtype)

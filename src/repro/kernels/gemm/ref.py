@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the blocked GEMM kernel."""
+
+import jax.numpy as jnp
+
+
+def gemm_ref(x, y, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,0 +1,57 @@
+"""FractalSync-shaped tree reduction Pallas kernel.
+
+On-chip analogue of the paper's H-tree: reduce N partial gradient rows to
+one by **pairwise halving in log2(N) levels** — the same recursive-pairwise
+order as the synchronization tree, which makes the reduction **bitwise
+deterministic and independent of how partials arrived** (a linear
+accumulation order changes with worker count; the tree order does not).
+Used for micro-batch gradient-accumulation reduction inside a BSP rank
+before the inter-chip fractal schedule takes over.
+
+Grid: one program per 128-lane column block; the [N, block] tile reduces in
+VMEM through log2(N) halvings (f32 accumulate).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tree_reduce_kernel(x_ref, o_ref, *, levels: int):
+    acc = x_ref[...].astype(jnp.float32)      # [N, block]
+    n = acc.shape[0]
+    for _ in range(levels):                   # pairwise halving: H-tree order
+        half = n // 2
+        acc = acc[:half] + acc[half:n]
+        n = half
+    o_ref[...] = acc[:1].astype(o_ref.dtype)
+
+
+def tree_reduce_pallas(x: jax.Array, *, block: int = 512,
+                       interpret: bool = False) -> jax.Array:
+    """x: [N, D] → [D] pairwise-tree sum; N must be a power of two and
+    D % block == 0 (ops.py pads)."""
+    N, D = x.shape
+    levels = int(math.log2(N))
+    if 1 << levels != N:
+        raise ValueError(f"N={N} not a power of two")
+    if D % block:
+        raise ValueError(f"D={D} not divisible by block={block}")
+    kernel = functools.partial(_tree_reduce_kernel, levels=levels)
+    out = pl.pallas_call(
+        kernel,
+        grid=(D // block,),
+        in_specs=[pl.BlockSpec((N, block), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, block), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, D), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)
+    return out[0]

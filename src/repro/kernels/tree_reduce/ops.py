@@ -1,0 +1,33 @@
+"""Public tree-reduce op: padding + interpret fallback."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import tree_reduce_pallas
+from .ref import tree_reduce_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def tree_reduce(x: jax.Array, *, block: int = 512,
+                interpret: bool | None = None) -> jax.Array:
+    """[N, D] → [D] deterministic pairwise-tree sum. N padded up to a power
+    of two with zeros; D padded to the block size."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    N, D = x.shape
+    n2 = 1 << max(1, (N - 1).bit_length())
+    block = min(block, 1 << (D - 1).bit_length() if D else block)
+    pd = (-D) % block
+    xp = jnp.pad(x, ((0, n2 - N), (0, pd)))
+    out = tree_reduce_pallas(xp, block=block, interpret=interpret)
+    return out[:D]
+
+
+__all__ = ["tree_reduce", "tree_reduce_ref"]

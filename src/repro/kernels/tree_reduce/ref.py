@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the tree-reduce kernel (same pairwise order)."""
+
+import math
+
+import jax.numpy as jnp
+
+
+def tree_reduce_ref(x):
+    """[N, D] → [D]: pairwise halving in f32 (bitwise == kernel)."""
+    acc = x.astype(jnp.float32)
+    n = acc.shape[0]
+    for _ in range(int(math.log2(n))):
+        half = n // 2
+        acc = acc[:half] + acc[half:n]
+        n = half
+    return acc[0].astype(x.dtype)
+
+
+def linear_reduce_ref(x):
+    """Accumulation-order baseline (sum left-to-right) for determinism tests."""
+    acc = x[0].astype(jnp.float32)
+    for i in range(1, x.shape[0]):
+        acc = acc + x[i].astype(jnp.float32)
+    return acc.astype(x.dtype)

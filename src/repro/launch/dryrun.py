@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver builds the real step function (train_step for
+train shapes, prefill/serve_step for inference shapes) with production
+in/out shardings, then::
+
+    lowered  = jax.jit(step, in_shardings=..., out_shardings=...).lower(*specs)
+    compiled = lowered.compile()
+    memory_analysis / cost_analysis / collective-bytes (hlo_analysis)
+
+and records everything in results/dryrun/<mesh>/<arch>__<shape>.json.
+Successful compilation at 256 and 512 devices is the proof that the sharding
+configuration is coherent; the JSON feeds EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --cell gemma2-2b:train_4k \
+      --mesh single [--opt remat=dots ...]
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import math          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs.base import SHAPES, SHAPE_BY_NAME, cell_applicable  # noqa: E402
+from repro.launch import hlo_analysis as H     # noqa: E402
+from repro.launch import specs as SP           # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import registry, transformer as T  # noqa: E402
+from repro.optim import adamw                  # noqa: E402
+from repro.runtime import trainer              # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# bf16 optimizer moments above this size, else f32 (EXPERIMENTS.md §Dry-run)
+BF16_MOMENT_THRESHOLD = 30e9
+
+
+def _mesh(kind: str):
+    return make_production_mesh(multi_pod=(kind == "multi"))
+
+
+def _adamw_cfg(cfg):
+    n = registry.count_params(cfg)
+    state = "bfloat16" if n > BF16_MOMENT_THRESHOLD else "float32"
+    import jax.numpy as jnp
+    return adamw.AdamWConfig(state_dtype=jnp.dtype(state))
+
+
+def lower_cell(arch: str, shape_name: str, mesh_kind: str,
+               opts: dict | None = None):
+    """Build + lower + compile one cell; returns (record, compiled)."""
+    opts = opts or {}
+    cfg = registry.get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": why}, None
+
+    # ---- hillclimb levers (EXPERIMENTS.md §Perf) ----
+    from repro.models import act_sharding as ACT
+    from repro.models import layers as LYR
+    T.set_remat(opts.get("remat", "block"))
+    T.LOSS_CHUNK = int(opts.get("loss_chunk", 512))
+    LYR.QUERY_CHUNK = int(opts.get("query_chunk", 512))
+    ACT.SEQ_SHARD = opts.get("seq_shard", "0") in ("1", "true")
+    mesh = _mesh(mesh_kind)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        step, _ = trainer.make_gspmd_train_step(cfg, mesh, _adamw_cfg(cfg))
+        pshape = SP.params_specs(cfg)
+        oshape = jax.eval_shape(lambda: adamw.init(pshape, _adamw_cfg(cfg)))
+        args = (pshape, oshape, SP.batch_specs(cfg, shape))
+    elif shape.kind == "prefill":
+        step, _ = trainer.make_prefill_step(
+            cfg, mesh, shape.global_batch,
+            shape.seq_len + cfg.frontend_tokens)
+        sp = SP.input_specs(cfg, shape)
+        pshape = SP.params_specs(cfg)
+        args = (pshape, sp["tokens"], sp["cache"]) + (
+            (sp["frontend"],) if cfg.frontend else ())
+    else:  # decode
+        step, _ = trainer.make_decode_step(cfg, mesh, shape.global_batch,
+                                           shape.seq_len)
+        sp = SP.input_specs(cfg, shape)
+        pshape = SP.params_specs(cfg)
+        args = (pshape, sp["token"], sp["cache"], sp["offset"])
+
+    with mesh:
+        lowered = step.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "status": "ok", "lower_s": round(t_lower, 1),
+              "compile_s": round(t_compile, 1),
+              "devices": int(math.prod(mesh.devices.shape)),
+              "opts": opts}
+
+    # ---- memory ----
+    try:
+        ma = compiled.memory_analysis()
+        record["memory"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+        if "argument_size_in_bytes" in record["memory"]:
+            m = record["memory"]
+            record["memory"]["total_per_device_gib"] = round(
+                (m.get("argument_size_in_bytes", 0)
+                 + m.get("temp_size_in_bytes", 0)) / 2**30, 3)
+    except Exception as e:  # CPU backend may not support it
+        record["memory"] = {"error": str(e)[:200]}
+
+    # ---- cost / flops ----
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        record["cost"] = {k: float(v) for k, v in ca.items()
+                          if isinstance(v, (int, float)) and
+                          k in ("flops", "transcendentals", "bytes accessed")}
+    except Exception as e:
+        record["cost"] = {"error": str(e)[:200]}
+
+    # ---- trip-count-corrected HLO analysis + roofline ----
+    # (cost_analysis counts While bodies once — see hlo_analysis docstring)
+    try:
+        hlo = compiled.as_text()
+        record["hlo_bytes"] = len(hlo)
+        st = H.analyze_hlo(hlo)
+        record["hlo_stats"] = st.as_dict()
+        record["roofline"] = H.roofline_terms(st)
+        # TPU-adjusted memory: strip the CPU bf16→f32 dot-operand copies
+        # (MXU consumes bf16 natively; see hlo_analysis.HloStats)
+        mem = record.get("memory", {})
+        if "temp_size_in_bytes" in mem:
+            adj = max(0.0, mem["temp_size_in_bytes"]
+                      - st.f32_upcast_copy_bytes)
+            mem["tpu_adjusted_total_gib"] = round(
+                (mem.get("argument_size_in_bytes", 0) + adj) / 2**30, 3)
+    except Exception as e:
+        record["hlo_stats"] = {"error": str(e)[:300]}
+
+    # ---- model flops (useful-compute ratio) ----
+    n_total = registry.count_params(cfg)
+    n_active = registry.count_params(cfg, active_only=True)
+    record["params_total"] = n_total
+    record["params_active"] = n_active
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    record["model_flops_global"] = float(mult * n_active * toks)
+    record["model_flops_per_device"] = (record["model_flops_global"]
+                                        / record["devices"])
+    flops = record.get("hlo_stats", {}).get("flops")
+    if flops:
+        record["useful_flops_ratio"] = round(
+            record["model_flops_per_device"] / flops, 4)
+        rf = record.get("roofline", {})
+        if rf.get("bound_s"):
+            record["roofline_fraction"] = round(
+                (record["model_flops_per_device"] / H.PEAK_FLOPS)
+                / rf["bound_s"], 4)
+    return record, compiled
+
+
+def cell_path(arch, shape_name, mesh_kind, tag="") -> Path:
+    d = RESULTS / mesh_kind
+    d.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    return d / f"{arch}__{shape_name}{suffix}.json"
+
+
+def run_cell(arch, shape_name, mesh_kind, opts=None, tag="", force=False):
+    out = cell_path(arch, shape_name, mesh_kind, tag)
+    if out.exists() and not force:
+        rec = json.loads(out.read_text())
+        print(f"cached  {arch:24s} {shape_name:12s} {mesh_kind:6s} "
+              f"{rec.get('status')}")
+        return rec
+    try:
+        rec, _ = lower_cell(arch, shape_name, mesh_kind, opts)
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "error", "error": f"{type(e).__name__}: {e}"[:1500],
+               "trace": traceback.format_exc()[-2000:], "opts": opts or {}}
+    out.write_text(json.dumps(rec, indent=2))
+    status = rec.get("status")
+    extra = ""
+    if status == "ok":
+        extra = (f"compile={rec.get('compile_s', 0):.0f}s "
+                 f"dom={rec.get('roofline', {}).get('dominant', '?')}")
+    print(f"{status:7s} {arch:24s} {shape_name:12s} {mesh_kind:6s} {extra}",
+          flush=True)
+    return rec
+
+
+def parse_opts(pairs):
+    out = {}
+    for p in pairs or []:
+        k, _, v = p.partition("=")
+        out[k] = v
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--cell", type=str, default=None,
+                    help="arch:shape")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="k=v hillclimb option (e.g. remat=dots)")
+    ap.add_argument("--tag", type=str, default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = registry.ARCH_IDS
+    shapes = [s.name for s in SHAPES]
+    if args.cell:
+        a, _, s = args.cell.partition(":")
+        archs, shapes = [a], [s]
+    if args.arch:
+        archs = [args.arch]
+    if args.shape:
+        shapes = [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    opts = parse_opts(args.opt)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                results.append(run_cell(arch, shape, mk, opts,
+                                        tag=args.tag, force=args.force))
+    n_ok = sum(r.get("status") == "ok" for r in results)
+    n_skip = sum(r.get("status") == "skipped" for r in results)
+    n_err = sum(r.get("status") == "error" for r in results)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"of {len(results)} cells")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

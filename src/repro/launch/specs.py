@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``input_specs(cfg, shape)`` returns the abstract inputs for the step function
+that shape exercises:
+
+  * train_*    → train_step(params, opt_state, batch)
+  * prefill_*  → prefill_step(params, tokens[, frontend], cache)
+  * decode_* / long_* → serve_step(params, token, cache, offset)
+    (one new token against a KV/state cache of seq_len)
+
+Modality frontends are STUBS per the brief: paligemma gets 256 precomputed
+SigLIP patch embeddings (1152-d), musicgen a 64-token conditioning prefix
+(768-d) — ShapeDtypeStructs here, synthetic tensors in the data pipeline.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import transformer as T
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((B, S), jnp.int32),
+             "labels": sds((B, S), jnp.int32)}
+    if cfg.frontend:
+        batch["frontend"] = sds((B, cfg.frontend_tokens, cfg.frontend_dim),
+                                jnp.bfloat16)
+    return batch
+
+
+def params_specs(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.key(0))
+
+
+def cache_specs_abstract(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract inputs keyed by step-function argument name."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32),
+               "cache": cache_specs_abstract(cfg, B, S + cfg.frontend_tokens)}
+        if cfg.frontend:
+            out["frontend"] = sds((B, cfg.frontend_tokens, cfg.frontend_dim),
+                                  jnp.bfloat16)
+        return out
+    if shape.kind == "decode":
+        return {"token": sds((B, 1), jnp.int32),
+                "cache": cache_specs_abstract(cfg, B, S),
+                "offset": sds((), jnp.int32)}
+    raise ValueError(shape.kind)

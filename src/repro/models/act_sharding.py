@@ -1,0 +1,107 @@
+"""Activation sharding constraints (GSPMD guidance).
+
+Without explicit constraints, GSPMD may propagate the FSDP *parameter*
+sharding (d_model over data) into activations and silently drop batch
+parallelism — observed as unsharded-batch [256,4096,·] buffers in the gemma2
+dry-run HLO.  These hooks pin the canonical layout:
+
+    hidden  [B, T, D]      → P(dp, None, None)
+    logits  [B, T, V]      → P(dp, None, "model")
+    moe_buf [B/G, E, C, D] → P(dp, "model", None, None)
+
+The policy is process-global and set by the step builders (runtime/trainer);
+when unset (unit tests, Tier-B manual-DP shard_map bodies) every hook is a
+no-op.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_POLICY: Optional[Tuple[Mesh, Tuple[str, ...]]] = None
+
+# hillclimb lever: additionally shard the sequence dim of hidden states over
+# "model" (sequence parallelism for norms/pointwise; GSPMD re-gathers where
+# attention needs full T)
+SEQ_SHARD = False
+
+
+def set_policy(mesh: Mesh, dp_axes: Tuple[str, ...]) -> None:
+    global _POLICY
+    _POLICY = (mesh, tuple(dp_axes))
+
+
+def clear_policy() -> None:
+    global _POLICY
+    _POLICY = None
+
+
+def _constrain(x, *spec):
+    if _POLICY is None:
+        return x
+    mesh, _ = _POLICY
+    # drop axes missing from the mesh or not dividing the dim
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(axes if (axes and dim % size == 0) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def _dp():
+    return _POLICY[1] if _POLICY else ("data",)
+
+
+def hidden(x):
+    """[B, T, D] (or [B, T, ...]): batch over the DP axes (+ optional
+    sequence-parallel T over "model")."""
+    t_axis = "model" if SEQ_SHARD else None
+    return _constrain(x, _dp(), t_axis, *([None] * (x.ndim - 2)))
+
+
+def logits(x):
+    """[B, T, V]: batch over DP, vocab over model."""
+    return _constrain(x, _dp(), None, "model")
+
+
+SERVE_EP = False   # set by serving step builders: experts over ALL axes
+
+
+def moe_buf(x):
+    """[G, E, C, D]: groups over DP, experts over model (EP); in serving,
+    experts span every axis when the expert count covers it (tokens
+    all-to-all, weights pinned), else E-over-model with intra-expert TP."""
+    if SERVE_EP and _POLICY is not None:
+        mesh, dp = _POLICY
+        ep = ("model",) + tuple(dp)
+        size = 1
+        for a in ep:
+            size *= mesh.shape.get(a, 1)
+        if x.shape[1] % size == 0:
+            return _constrain(x, None, ep, None, None)
+    return _constrain(x, _dp(), "model", None, None)
+
+
+def scores_sshard(x):
+    """[B, H, T, S] decode scores: keep S over "model" (flash-decode
+    layout; heads replicate — tiny for T==1)."""
+    return _constrain(x, _dp(), None, None, "model")
+
+
+def kv(x):
+    """[B, S, H, D] expanded keys/values: batch over DP, sequence over
+    "model" (matches the decode-cache layout; flash-decode-style S-parallel
+    attention).  Used by the MLA path whose K/V are recomputed from the
+    latent cache."""
+    return _constrain(x, _dp(), "model", *([None] * (x.ndim - 2)))

@@ -1,0 +1,587 @@
+"""Model building blocks shared by all ten assigned architectures.
+
+Pure-functional JAX: parameters are nested dicts of arrays; every layer is
+(init_fn, apply_fn).  Conventions:
+
+  * activations bf16 (configurable), softmax/normalizers f32;
+  * attention is GQA-grouped (no KV head replication in memory);
+  * sequences ≥ ``CHUNKED_ATTN_THRESHOLD`` use a lax.scan online-softmax
+    (flash-style) path so 32k/500k shapes never materialize T×S scores —
+    this is also the pure-jnp oracle for the Pallas flash kernel;
+  * MoE uses sort-based capacity dispatch (GShard capacity semantics without
+    the O(T·E·C·d) one-hot einsum) and shards experts over the "model" axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+from . import act_sharding as ACT
+
+CHUNKED_ATTN_THRESHOLD = 8_192   # inference: online-softmax over KV chunks
+ATTN_CHUNK = 1_024
+QUERY_CHUNK_THRESHOLD = 2_048    # training: checkpointed query blocks
+QUERY_CHUNK = 512
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _init_dense(key, d_in, d_out, dtype, scale=None, bias=False):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms / positional encodings
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: [..., T, H, D]; positions: [..., T] (broadcastable)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                          # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., T, D/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    half = d_model // 2
+    freq = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Attention core (GQA, masks, online-softmax chunking)
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(pos_q, pos_k, *, causal, window, prefix_len):
+    """Additive f32 bias [..., Tq, Tk] built from position comparisons."""
+    pq = pos_q[..., :, None]
+    pk = pos_k[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(pq.shape, pk.shape), bool)
+    if causal:
+        allowed = pk <= pq
+        if prefix_len is not None:
+            allowed = allowed | (pk < prefix_len)
+        ok &= allowed
+    if window is not None:
+        ok &= (pq - pk) < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def gqa_attention(q, k, v, *, pos_q, pos_k, causal=True, window=None,
+                  prefix_len=None, attn_cap=None, scale=None,
+                  chunk=None, chunk_q=None) -> jnp.ndarray:
+    """q: [B,Tq,Hq,Dk]  k: [B,Tk,Hkv,Dk]  v: [B,Tk,Hkv,Dv] → [B,Tq,Hq,Dv].
+
+    ``chunk``  : online-softmax over Tk blocks — memory-lean FORWARD
+                 (inference prefill; scan-backward would save carries).
+    ``chunk_q``: checkpointed query blocks — memory-lean fwd+bwd for
+                 TRAINING: per-block scores recomputed in backward, scan
+                 outputs (not carries) are the only per-block residuals.
+    """
+    B, Tq, Hq, Dk = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    Dv = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+    qg = q.reshape(B, Tq, Hkv, G, Dk) * scale
+    # normalize positions to [B, T] so mask bias is [B, Tq, Tk]
+    if pos_q.ndim == 1:
+        pos_q = jnp.broadcast_to(pos_q[None, :], (B, Tq))
+    if pos_k.ndim == 1:
+        pos_k = jnp.broadcast_to(pos_k[None, :], (B, k.shape[1]))
+
+    if chunk_q is not None and Tq > chunk_q:
+        # Blocked attention with STATIC per-block KV extents (Python-unrolled
+        # query blocks): block j only reads keys [lo_j, hi_j) where hi_j
+        # follows the causal diagonal and lo_j the sliding window — the HLO
+        # contains only the needed flops (≈½ for causal, ≈W/T for windowed)
+        # instead of masked-but-computed full T×S scores.  Blocks are
+        # jax.checkpoint'ed when grads flow (training=True callers), so the
+        # backward recomputes one block's scores at a time.
+        # Assumes pos_q/pos_k are arange-aligned (train/prefill from 0).
+        C = chunk_q
+        nq = -(-Tq // C)
+        pad = nq * C - Tq
+        if pad:
+            qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+            pos_q = jnp.pad(pos_q, ((0, 0), (0, pad)),
+                            constant_values=-1)      # masked (pk<=pq fails)
+        Tk = k.shape[1]
+
+        def block(lo, hi, q_blk, pq_blk, k_full, v_full, pk_full):
+            # slice INSIDE the checkpointed fn: residuals are the original
+            # k/v buffers (saved once), not per-block slice copies
+            k_j, v_j = k_full[:, lo:hi], v_full[:, lo:hi]
+            pk_j = pk_full[:, lo:hi]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_j
+                           ).astype(jnp.float32)
+            s = softcap(s, attn_cap)
+            s = s + _mask_bias(pq_blk, pk_j, causal=causal, window=window,
+                               prefix_len=prefix_len)[:, None, None]
+            s = jnp.where(s == -jnp.inf, -1e30, s)   # padded rows stay finite
+            p = jax.nn.softmax(s, axis=-1).astype(v_j.dtype)
+            return jnp.einsum("bhgqk,bkhd->bqhgd", p, v_j)
+
+        blk = jax.checkpoint(block, static_argnums=(0, 1))
+        pre_hi = (-(-prefix_len // C) * C) if prefix_len else 0
+        outs = []
+        for j in range(nq):
+            hi = Tk if not causal else min(Tk, max((j + 1) * C, pre_hi))
+            lo = 0 if window is None else max(0, (j * C - window) // C * C)
+            outs.append(blk(lo, hi, qg[:, j * C:(j + 1) * C],
+                            pos_q[:, j * C:(j + 1) * C], k, v, pos_k))
+        o = jnp.concatenate(outs, axis=1).reshape(B, nq * C, Hq, Dv)
+        return o[:, :Tq]
+
+    if chunk is None or k.shape[1] <= chunk:
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+        s = softcap(s, attn_cap)
+        s = s + _mask_bias(pos_q, pos_k, causal=causal, window=window,
+                           prefix_len=prefix_len)[:, None, None]
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+        return o.reshape(B, Tq, Hq, Dv)
+
+    # ---- online-softmax over key chunks (flash-style, pure jnp oracle) ----
+    Tk = k.shape[1]
+    n_chunks = -(-Tk // chunk)
+    pad = n_chunks * chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_k = jnp.pad(pos_k, [(0, 0)] * (pos_k.ndim - 1) + [(0, pad)],
+                        constant_values=jnp.iinfo(jnp.int32).max // 2)
+    kc = k.reshape(B, n_chunks, chunk, Hkv, Dk)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, Dv)
+    pkc = pos_k.reshape(*pos_k.shape[:-1], n_chunks, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_j, v_j, pk_j = xs                     # [B,chunk,Hkv,D], pk [B,chunk]
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_j).astype(jnp.float32)
+        s = softcap(s, attn_cap)
+        bias = _mask_bias(pos_q, pk_j, causal=causal, window=window,
+                          prefix_len=prefix_len)          # [B,Tq,chunk]
+        s = s + bias[:, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # fully-masked-so-far rows keep m_new == -inf; use a finite proxy so
+        # exp() never sees (-inf) − (-inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        corr = jnp.exp(m - m_safe)              # m == -inf → 0
+        p = jnp.exp(s - m_safe[..., None])      # s == -inf → 0
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(v.dtype), v_j).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Tq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Tq, Dv), jnp.float32)
+    xs = (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+          jnp.moveaxis(pkc, -2, 0))
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), xs)
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(o, -2, 1).reshape(B, Tq, Hq, Dv).astype(q.dtype)
+
+
+def _cache_update(buf, new, offset):
+    """Write ``new`` [B,T,...] into cache ``buf`` [B,S,...] at ``offset``.
+
+    * T == S (prefill filling the whole cache): replace outright;
+    * T == 1 (decode): one-hot select over S — shard-local under an
+      S-over-"model" layout, unlike dynamic-update-slice whose GSPMD
+      lowering materializes [S_local × S] masks;
+    * general T: dynamic_update_slice (training never caches).
+    """
+    S = buf.shape[1]
+    T = new.shape[1]
+    if T == S:
+        return new.astype(buf.dtype)
+    if T == 1:
+        hit = (jnp.arange(S, dtype=jnp.int32) == offset)
+        hit = hit.reshape((1, S) + (1,) * (buf.ndim - 2))
+        return jnp.where(hit, new.astype(buf.dtype), buf)
+    return lax.dynamic_update_slice_in_dim(buf, new.astype(buf.dtype),
+                                           offset, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (projections + rope + cache)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    D, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init_dense(ks[0], D, H * Dh, dt, bias=cfg.qkv_bias),
+        "wk": _init_dense(ks[1], D, Hkv * Dh, dt, bias=cfg.qkv_bias),
+        "wv": _init_dense(ks[2], D, Hkv * Dh, dt, bias=cfg.qkv_bias),
+        "wo": _init_dense(ks[3], H * Dh, D, dt,
+                          scale=1.0 / math.sqrt(H * Dh)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(Dh, dt)
+        p["k_norm"] = init_rmsnorm(Dh, dt)
+    return p
+
+
+def apply_attention(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
+                    cache_offset=None, window=None, prefix_len=None):
+    """x: [B,T,D]. Returns (out [B,T,D], new_kv or None).
+
+    kv_cache: dict(k=[B,S,Hkv,Dh], v=...) pre-allocated ring for decode;
+    cache_offset: scalar current length (tokens already in cache)."""
+    B, T, D = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense(p["wq"], x).reshape(B, T, H, Dh)
+    k = dense(p["wk"], x).reshape(B, T, Hkv, Dh)
+    v = dense(p["wv"], x).reshape(B, T, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is None:
+        pos_k = positions
+        chunk_q = QUERY_CHUNK if T >= QUERY_CHUNK_THRESHOLD else None
+        o = gqa_attention(q, k, v, pos_q=positions, pos_k=pos_k,
+                          causal=True, window=window, prefix_len=prefix_len,
+                          attn_cap=cfg.attn_softcap, chunk_q=chunk_q)
+        new_kv = {"k": k, "v": v}
+    else:
+        S = kv_cache["k"].shape[1]
+        k_all = _cache_update(kv_cache["k"], k, cache_offset)
+        v_all = _cache_update(kv_cache["v"], v, cache_offset)
+        pos_k = jnp.arange(S, dtype=jnp.int32)[None, :]
+        pos_q = positions if positions.ndim > 1 else positions[None, :]
+        # prefill (T>1): blocked attention with static causal extents;
+        # single-query decode never blocks: scores are [B,H,1,S] (tiny) and
+        # blocking would fight the model-axis sharding of S.
+        chunk_q = QUERY_CHUNK * 2 if (T >= QUERY_CHUNK_THRESHOLD) else None
+        o = gqa_attention(q, k_all, v_all, pos_q=pos_q, pos_k=pos_k,
+                          causal=True, window=window, prefix_len=prefix_len,
+                          attn_cap=cfg.attn_softcap, chunk_q=chunk_q)
+        new_kv = {"k": k_all, "v": v_all}
+    out = dense(p["wo"], o.reshape(B, T, H * Dh))
+    return out, new_kv
+
+
+# ---------------------------------------------------------------------------
+# MLA: multi-head latent attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig):
+    m: MLAConfig = cfg.mla
+    dt = _dtype(cfg)
+    D, H = cfg.d_model, cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "q_down": _init_dense(ks[0], D, m.q_lora_rank, dt),
+        "q_norm": init_rmsnorm(m.q_lora_rank, dt),
+        "q_up": _init_dense(ks[1], m.q_lora_rank, H * qk_dim, dt),
+        "kv_down": _init_dense(ks[2], D, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dt),
+        "kv_up": _init_dense(ks[3], m.kv_lora_rank,
+                             H * (m.qk_nope_head_dim + m.v_head_dim), dt),
+        "wo": _init_dense(ks[4], H * m.v_head_dim, D, dt),
+    }
+
+
+def apply_mla(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
+              cache_offset=None):
+    """Latent-cache MLA. Cache stores (c_kv, k_rope): [B,S,kv_lora(+rope)]."""
+    m: MLAConfig = cfg.mla
+    B, T, D = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = dense(p["q_up"], rms_norm(p["q_norm"], dense(p["q_down"], x),
+                                  cfg.norm_eps)).reshape(B, T, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = dense(p["kv_down"], x)
+    c_kv = rms_norm(p["kv_norm"], kv[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, m.kv_lora_rank:], positions,
+                        cfg.rope_theta)                       # [B,T,1,dr]
+
+    if kv_cache is not None:
+        c_kv = _cache_update(kv_cache["c_kv"], c_kv, cache_offset)
+        k_rope = _cache_update(kv_cache["k_rope"], k_rope, cache_offset)
+        S = c_kv.shape[1]
+        pos_k = jnp.arange(S, dtype=jnp.int32)[None, :]
+        pos_q = positions if positions.ndim > 1 else positions[None, :]
+    else:
+        S = T
+        pos_k = positions
+        pos_q = positions
+
+    # decode uses the ABSORBED-WEIGHT form (DeepSeek inference trick): score
+    # and output projections fold W_uk/W_uv into q/o so K/V are NEVER
+    # materialized from the latent — attention runs in the 512-d latent
+    # space directly against the S-sharded cache.
+    if kv_cache is not None and T == 1:
+        o = _mla_absorbed_decode(p, cfg, q_nope, q_rope, c_kv, k_rope,
+                                 cache_offset)
+        out = dense(p["wo"], o.reshape(B, T, H * dv))
+        return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+    up = dense(p["kv_up"], c_kv).reshape(B, S, H, dn + dv)
+    k_nope, v = up[..., :dn], up[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if kv_cache is None:        # training
+        chunk_q = QUERY_CHUNK if T >= QUERY_CHUNK_THRESHOLD else None
+    elif T > 1:                 # prefill
+        chunk_q = QUERY_CHUNK * 2 if T >= QUERY_CHUNK_THRESHOLD else None
+    else:                       # decode
+        chunk_q = None
+    o = gqa_attention(qf, k, v, pos_q=pos_q, pos_k=pos_k, causal=True,
+                      attn_cap=None, scale=1.0 / math.sqrt(dn + dr),
+                      chunk_q=chunk_q)
+    out = dense(p["wo"], o.reshape(B, T, H * dv))
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope} if kv_cache is not None \
+        else {"c_kv": c_kv, "k_rope": k_rope}
+    return out, new_cache
+
+
+def _mla_absorbed_decode(p, cfg, q_nope, q_rope, c_kv, k_rope, offset):
+    """One-token MLA attention in latent space (weight absorption).
+
+      scores = (q_nope·W_uk)·c_kv + q_rope·k_rope     [B,H,1,S]
+      out    = (softmax·c_kv)·W_uv                    [B,1,H,dv]
+
+    c_kv stays S-sharded over "model" end to end; the per-layer wire cost is
+    the (small) absorbed weights + softmax partials instead of all-gathering
+    a [B,S,H,192] materialized K (the 204 GiB/dev baseline pathology).
+    """
+    m = cfg.mla
+    B, T, H, dn = q_nope.shape
+    S = c_kv.shape[1]
+    dv = m.v_head_dim
+    w_up = p["kv_up"]["w"].reshape(m.kv_lora_rank, H, dn + dv)
+    w_k, w_v = w_up[..., :dn], w_up[..., dn:]
+
+    q_eff = jnp.einsum("bthd,rhd->bthr", q_nope, w_k)       # [B,1,H,r]
+    s = jnp.einsum("bthr,bsr->bhts", q_eff, c_kv).astype(jnp.float32)
+    s = s + jnp.einsum("bthd,bsd->bhts", q_rope,
+                       k_rope[:, :, 0]).astype(jnp.float32)
+    s = s / math.sqrt(dn + m.qk_rope_head_dim)
+    s = ACT.scores_sshard(s)
+    valid = jnp.arange(S, dtype=jnp.int32)[None, None, None, :] <= offset
+    s = jnp.where(valid, s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhts,bsr->bthr", prob.astype(c_kv.dtype), c_kv)
+    return jnp.einsum("bthr,rhd->bthd", o_lat, w_v)         # [B,1,H,dv]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ArchConfig, d_ff=None):
+    """mlp styles: swiglu/geglu (gated, 3 matrices) or gelu (plain, 2)."""
+    dt = _dtype(cfg)
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": _init_dense(ks[1], D, F, dt),
+        "w_down": _init_dense(ks[2], F, D, dt, scale=1.0 / math.sqrt(F)),
+    }
+    if cfg.mlp != "gelu":
+        p["w_gate"] = _init_dense(ks[0], D, F, dt)
+    return p
+
+
+def apply_mlp(p, cfg: ArchConfig, x):
+    if cfg.mlp == "gelu":
+        return dense(p["w_down"],
+                     jax.nn.gelu(dense(p["w_up"], x), approximate=True))
+    act = jax.nn.silu if cfg.mlp == "swiglu" else \
+        (lambda z: jax.nn.gelu(z, approximate=True))
+    return dense(p["w_down"], act(dense(p["w_gate"], x)) * dense(p["w_up"], x))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based capacity dispatch, EP over "model")
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ArchConfig):
+    mo: MoEConfig = cfg.moe
+    dt = _dtype(cfg)
+    D, E, F = cfg.d_model, mo.num_experts, mo.d_expert
+    ks = jax.random.split(key, 5)
+    scale_in = 1.0 / math.sqrt(D)
+    scale_out = 1.0 / math.sqrt(F)
+    p = {
+        "router": _init_dense(ks[0], D, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+                   * scale_in).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+                 * scale_in).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                   * scale_out).astype(dt),
+    }
+    if mo.num_shared:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=F * mo.num_shared)
+    return p
+
+
+def _router_gates(p, mo: MoEConfig, x2d):
+    logits = (x2d.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    if mo.router == "sigmoid":                      # DeepSeek-V3 aux-free
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(scores, mo.top_k)        # [T,k]
+    if mo.norm_topk:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx, scores
+
+
+def moe_load_balance_loss(scores, idx, num_experts):
+    """Switch-style load-balance aux loss (mean prob × token fraction)."""
+    T = scores.shape[0]
+    frac_prob = scores.mean(0)
+    counts = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    frac_tok = counts / jnp.maximum(counts.sum(), 1.0)
+    return num_experts * jnp.sum(frac_prob * frac_tok)
+
+
+def apply_moe(p, cfg: ArchConfig, x):
+    """x: [B,T,D] → (y, aux_loss). Group-wise sort-based capacity dispatch.
+
+    Tokens are grouped by sequence (group = batch row), GShard-style, so the
+    dispatch buffer is [B, E, C, D] with LOCAL capacity C = ceil(T·k/E·cf):
+    the batch dim stays sharded over the data axes and experts shard over
+    "model" (EP) — no tensor ever materializes global-capacity buffers.
+    Per group:
+
+      1. top-k routing → (token, expert, gate) triples
+      2. stable sort by expert; position-in-expert via segment arithmetic
+      3. scatter into [E, C, D]; batched expert GEMMs
+      4. gather back with gate weighting; overflow tokens drop (GShard).
+    """
+    mo: MoEConfig = cfg.moe
+    B, T, D = x.shape
+    E, K = mo.num_experts, mo.top_k
+    C = max(1, int(math.ceil(T * K / E * mo.capacity_factor)))
+
+    gates, idx, scores = _router_gates(p, mo, x.reshape(B * T, D))
+    gates = gates.reshape(B, T, K)
+    idx = idx.reshape(B, T, K)
+
+    def dispatch_group(xg, gate_g, idx_g):
+        """xg: [T,D]; returns (buf [E,C,D], e_sorted, slot, t_sorted, w).
+
+        The [E,C,D] buffer is built by GATHER (rows indexed by a tiny
+        [E,C+1] int32 slot→token map built with a cheap scatter), never by
+        scattering activations into the expert-sharded dim — GSPMD can keep
+        an E-sharded gather fully local, whereas a data-dependent scatter
+        into a sharded dim forces replication (observed: 3.1 TiB/device on
+        deepseek train before this change)."""
+        flat_e = idx_g.reshape(-1)                       # [T*K]
+        flat_g = gate_g.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+        order = jnp.argsort(flat_e, stable=True)
+        e_s, t_s, g_s = flat_e[order], flat_t[order], flat_g[order]
+        starts = jnp.searchsorted(e_s, jnp.arange(E, dtype=e_s.dtype))
+        pos = jnp.arange(T * K, dtype=jnp.int32) - starts[e_s]
+        keep = pos < C
+        slot = jnp.where(keep, pos, C)                   # C = overflow bin
+        slot_tok = jnp.full((E, C + 1), T, jnp.int32)    # T = "empty" row
+        slot_tok = slot_tok.at[e_s, slot].set(
+            jnp.where(keep, t_s, T))[:, :C]              # [E,C] tiny
+        w = (g_s * keep.astype(jnp.float32))
+        return slot_tok, e_s, slot, t_s, w
+
+    slot_tok, e_s, slot, t_s, w = jax.vmap(dispatch_group)(x, gates, idx)
+    # gather rows per expert slot: [B,E,C,D]; padded row T reads zeros
+    x_pad = jnp.concatenate(
+        [x, jnp.zeros((B, 1, D), x.dtype)], axis=1)      # [B,T+1,D]
+    buf = jnp.take_along_axis(
+        x_pad[:, :, None, :],
+        slot_tok.reshape(B, E * C, 1, 1).astype(jnp.int32), axis=1
+    ).reshape(B, E, C, D)
+    # buf: [B,E,C,D] — B over data axes, E over "model" (EP)
+    buf = ACT.moe_buf(buf)
+
+    act = jax.nn.silu if cfg.mlp == "swiglu" else \
+        (lambda z: jax.nn.gelu(z, approximate=True))
+    h = act(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) \
+        * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    y_exp = ACT.moe_buf(
+        jnp.einsum("becf,efd->becd", h, p["w_down"]))     # [B,E,C,D]
+
+    def combine_group(y_g, e_s, slot, t_s, w):
+        contrib = y_g[e_s, jnp.minimum(slot, C - 1)] \
+            * w.astype(y_g.dtype)[:, None]
+        return jnp.zeros((T, D), y_g.dtype).at[t_s].add(contrib)
+
+    y = jax.vmap(combine_group)(y_exp, e_s, slot, t_s, w)
+
+    if mo.num_shared:
+        y = y + apply_mlp(p["shared"], cfg, x.reshape(B * T, D)
+                          ).reshape(B, T, D)
+    aux = moe_load_balance_loss(scores, idx.reshape(B * T, K), E)
+    return y, aux

@@ -1,0 +1,339 @@
+"""State-space / recurrent blocks: Mamba (Jamba) and xLSTM (mLSTM + sLSTM).
+
+All three expose (init, forward, step):
+
+  * ``forward``  — full-sequence processing via lax.scan over time (exact
+    recurrence; compiles to a compact While loop, which keeps the 512-device
+    dry-run HLO small). Returns the final recurrent state as the decode cache.
+  * ``step``     — single-token decode: O(1) state update, no KV cache —
+    this is what makes the SSM/hybrid archs eligible for long_500k.
+
+Shapes follow the papers: Mamba [arXiv:2312.00752] selective SSM with
+d_inner = expand·d_model, depthwise causal conv (d_conv), Δ/B/C data-dependent;
+xLSTM [arXiv:2405.04517] exponential gating with max-stabilizer state m,
+matrix memory (mLSTM) and scalar memory with recurrent gates (sLSTM).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, SSMConfig
+from .layers import _dtype, _init_dense, dense, init_rmsnorm, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal 1D conv. x: [B,T,C], w: [K,C].
+
+    state: [B,K-1,C] previous inputs (decode); returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)        # [B, T+K-1, C]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else pad
+    return y, new_state
+
+
+def _softplus(x):
+    return jax.nn.softplus(x)
+
+
+TIME_CHUNK = 256
+
+
+def chunked_scan(body, carry, xs, chunk: int = None):
+    """lax.scan with chunked-BPTT memory: outer scan over time chunks, each
+    chunk jax.checkpoint'ed — backward saves T/chunk boundary states and
+    recomputes inside the chunk, instead of saving every per-step carry
+    (naive BPTT stored 4096 × state for train_4k: ~TiB-scale on xLSTM)."""
+    chunk = chunk or TIME_CHUNK
+    T = jax.tree.leaves(xs)[0].shape[0]
+    if T <= chunk or T % chunk:
+        return lax.scan(body, carry, xs)
+    n = T // chunk
+
+    def chunk_body(c, xs_chunk):
+        return lax.scan(body, c, xs_chunk)
+
+    xs_chunks = jax.tree.map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+    carry, ys = lax.scan(jax.checkpoint(chunk_body), carry, xs_chunks)
+    return carry, jax.tree.map(
+        lambda a: a.reshape((T,) + a.shape[2:]), ys)
+
+
+# ===========================================================================
+# Mamba (selective SSM) — Jamba's recurrent layer
+# ===========================================================================
+
+
+def init_mamba(key, cfg: ArchConfig):
+    s: SSMConfig = cfg.ssm
+    dt = _dtype(cfg)
+    D = cfg.d_model
+    d_in = s.expand * D
+    dt_rank = s.dt_rank or -(-D // 16)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_in, 1))
+    p = {
+        "in_proj": _init_dense(ks[0], D, 2 * d_in, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, d_in), jnp.float32)
+                   / math.sqrt(s.d_conv)).astype(dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "x_proj": _init_dense(ks[2], d_in, dt_rank + 2 * s.d_state, dt),
+        "dt_proj": _init_dense(ks[3], dt_rank, d_in, dt, bias=True),
+        "A_log": jnp.log(A),                      # f32: dynamics stay f32
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _init_dense(ks[4], d_in, D, dt),
+    }
+    return p
+
+
+def _mamba_scan_step(A, x_t, dt_t, B_t, C_t, h):
+    """One selective-SSM step. h: [B,d_in,N]; returns (h', y_t [B,d_in])."""
+    dA = jnp.exp(dt_t[..., None] * A[None])               # [B,d_in,N]
+    dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_t)
+    return h, y
+
+
+def mamba_forward(p, cfg: ArchConfig, u, state=None):
+    """u: [B,T,D] → (y [B,T,D], cache{conv,h})."""
+    s: SSMConfig = cfg.ssm
+    B_, T, D = u.shape
+    d_in = s.expand * D
+    dt_rank = s.dt_rank or -(-D // 16)
+    xz = dense(p["in_proj"], u)
+    x, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    x, new_conv = _causal_conv(x, p["conv_w"], conv_state)
+    x = jax.nn.silu(x + p["conv_b"])
+
+    proj = dense(p["x_proj"], x)
+    dt_in = proj[..., :dt_rank]
+    Bc = proj[..., dt_rank:dt_rank + s.d_state].astype(jnp.float32)
+    Cc = proj[..., dt_rank + s.d_state:].astype(jnp.float32)
+    dt_full = _softplus(dense(p["dt_proj"], dt_in).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])
+    x32 = x.astype(jnp.float32)
+
+    h0 = (jnp.zeros((B_, d_in, s.d_state), jnp.float32) if state is None
+          else state["h"])
+
+    def body(h, t_slice):
+        x_t, dt_t, B_t, C_t = t_slice
+        h, y = _mamba_scan_step(A, x_t, dt_t, B_t, C_t, h)
+        return h, y
+
+    xs = (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(dt_full, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    h_final, ys = chunked_scan(body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x32 * p["D"][None, None, :]
+    y = (y.astype(u.dtype)) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    return out, {"conv": new_conv, "h": h_final}
+
+
+def mamba_step(p, cfg: ArchConfig, u_t, state):
+    """u_t: [B,1,D] single token; state from forward/step."""
+    out, new_state = mamba_forward(p, cfg, u_t, state)
+    return out, new_state
+
+
+# ===========================================================================
+# mLSTM block (xLSTM) — parallelizable matrix-memory cell
+# ===========================================================================
+
+
+def init_mlstm(key, cfg: ArchConfig):
+    s: SSMConfig = cfg.ssm
+    dt = _dtype(cfg)
+    D = cfg.d_model
+    d_in = s.expand * D                    # up-projection factor 2 (paper)
+    NH = s.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": init_rmsnorm(D, dt),
+        "up_proj": _init_dense(ks[0], D, 2 * d_in, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, d_in), jnp.float32)
+                   / math.sqrt(s.d_conv)).astype(dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        # headwise (block-diagonal) q/k/v, as in the official NX-AI blocks
+        "wq": (jax.random.normal(ks[2], (NH, d_in // NH, d_in // NH),
+                                 jnp.float32) / math.sqrt(d_in // NH)).astype(dt),
+        "wk": (jax.random.normal(ks[3], (NH, d_in // NH, d_in // NH),
+                                 jnp.float32) / math.sqrt(d_in // NH)).astype(dt),
+        "wv": (jax.random.normal(ks[4], (NH, d_in // NH, d_in // NH),
+                                 jnp.float32) / math.sqrt(d_in // NH)).astype(dt),
+        "w_if": _init_dense(ks[5], d_in, 2 * NH, dt, bias=True),
+        "out_norm": init_rmsnorm(d_in, dt),
+        "down_proj": _init_dense(ks[6], d_in, D, dt),
+        "skip": jnp.ones((d_in,), dt),
+    }
+
+
+def _mlstm_cell_step(q_t, k_t, v_t, i_t, f_t, state):
+    """Stabilized mLSTM recurrence (paper eq. 19-27).
+
+    q,k,v: [B,NH,dh]; i,f: [B,NH] pre-activations.
+    state: C [B,NH,dh,dh], n [B,NH,dh], m [B,NH]."""
+    C, n, m = state
+    log_f = -_softplus(-f_t)                      # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_act = jnp.exp(i_t - m_new)
+    f_act = jnp.exp(log_f + m - m_new)
+    C = f_act[..., None, None] * C + i_act[..., None, None] \
+        * (k_t[..., :, None] * v_t[..., None, :])
+    n = f_act[..., None] * n + i_act[..., None] * k_t
+    h_num = jnp.einsum("bhij,bhi->bhj", C, q_t)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, q_t)), 1.0)
+    h = h_num / h_den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_forward(p, cfg: ArchConfig, u, state=None):
+    s: SSMConfig = cfg.ssm
+    B_, T, D = u.shape
+    d_in = s.expand * D
+    NH = s.num_heads
+    dh = d_in // NH
+    x = rms_norm(p["norm"], u, cfg.norm_eps)
+    xm, z = jnp.split(dense(p["up_proj"], x), 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_conv(xm, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc + p["conv_b"])
+    xch = xc.reshape(B_, T, NH, dh)
+    xmh = xm.reshape(B_, T, NH, dh)
+    hw = lambda w, z: jnp.einsum("bthd,hdk->bthk", z, w)
+    q = hw(p["wq"], xch) / math.sqrt(dh)
+    k = hw(p["wk"], xch) / math.sqrt(dh)
+    v = hw(p["wv"], xmh)
+    gif = dense(p["w_if"], xm).astype(jnp.float32)     # [B,T,2NH]
+    i_pre, f_pre = gif[..., :NH], gif[..., NH:]
+
+    if state is None:
+        C0 = jnp.zeros((B_, NH, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B_, NH, dh), jnp.float32)
+        m0 = jnp.zeros((B_, NH), jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def body(carry, t_slice):
+        q_t, k_t, v_t, i_t, f_t = t_slice
+        carry, h = _mlstm_cell_step(q_t.astype(jnp.float32),
+                                    k_t.astype(jnp.float32),
+                                    v_t.astype(jnp.float32), i_t, f_t, carry)
+        return carry, h
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_pre, f_pre))
+    (C, n, m), hs = chunked_scan(body, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B_, T, d_in).astype(u.dtype)
+    h = rms_norm(p["out_norm"], h, cfg.norm_eps) + p["skip"] * xc
+    h = h * jax.nn.silu(z)
+    out = u + dense(p["down_proj"], h)
+    return out, {"conv": new_conv, "C": C, "n": n, "m": m}
+
+
+def mlstm_step(p, cfg, u_t, state):
+    return mlstm_forward(p, cfg, u_t, state)
+
+
+# ===========================================================================
+# sLSTM block (xLSTM) — scalar memory, recurrent gates
+# ===========================================================================
+
+
+def init_slstm(key, cfg: ArchConfig):
+    s: SSMConfig = cfg.ssm
+    dt = _dtype(cfg)
+    D = cfg.d_model
+    NH = s.num_heads
+    dh = D // NH
+    ks = jax.random.split(key, 5)
+    ffn = max(1, int(D * 4 / 3))
+    return {
+        "norm": init_rmsnorm(D, dt),
+        "conv_w": (jax.random.normal(ks[0], (s.d_conv, D), jnp.float32)
+                   / math.sqrt(s.d_conv)).astype(dt),
+        "conv_b": jnp.zeros((D,), dt),
+        "w_gates": _init_dense(ks[1], D, 4 * D, dt, bias=True),
+        # per-head recurrent gate matrices (block-diagonal R, paper eq. 30)
+        "r_gates": (jax.random.normal(ks[2], (NH, dh, 4 * dh), jnp.float32)
+                    / math.sqrt(dh)).astype(dt),
+        "group_norm": init_rmsnorm(D, dt),
+        "ffn_up": _init_dense(ks[3], D, 2 * ffn, dt),
+        "ffn_down": _init_dense(ks[4], ffn, D, dt),
+    }
+
+
+def _slstm_cell_step(p, cfg, wx_t, carry):
+    """wx_t: [B,4D] input contribution; carry: (c,n,h,m) each [B,D]."""
+    s: SSMConfig = cfg.ssm
+    D = cfg.d_model
+    NH = s.num_heads
+    dh = D // NH
+    c, n, h, m = carry
+    B_ = wx_t.shape[0]
+    hh = h.reshape(B_, NH, dh)
+    rec = jnp.einsum("bhd,hdk->bhk", hh,
+                     p["r_gates"].astype(jnp.float32)).reshape(B_, 4 * D)
+    pre = wx_t + rec
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    log_f = -_softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_act = jnp.exp(i_pre - m_new)
+    f_act = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c = f_act * c + i_act * z
+    n = f_act * n + i_act
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_forward(p, cfg: ArchConfig, u, state=None):
+    B_, T, D = u.shape
+    x = rms_norm(p["norm"], u, cfg.norm_eps)
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_conv(x, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc + p["conv_b"])
+    wx = dense(p["w_gates"], xc).astype(jnp.float32)     # [B,T,4D]
+
+    if state is None:
+        zeros = jnp.zeros((B_, D), jnp.float32)
+        carry = (zeros, zeros, zeros, zeros)
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+
+    def body(carry, wx_t):
+        return _slstm_cell_step(p, cfg, wx_t, carry)
+
+    carry, hs = chunked_scan(body, carry, jnp.moveaxis(wx, 1, 0))
+    c, n, h, m = carry
+    y = jnp.moveaxis(hs, 0, 1).astype(u.dtype)
+    y = rms_norm(p["group_norm"], y, cfg.norm_eps)
+    u = u + y
+    # gated FFN (projection factor 4/3, paper App. figure)
+    gate, up = jnp.split(dense(p["ffn_up"], u), 2, axis=-1)
+    u = u + dense(p["ffn_down"], jax.nn.gelu(gate, approximate=True) * up)
+    return u, {"conv": new_conv, "c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_step(p, cfg, u_t, state):
+    return slstm_forward(p, cfg, u_t, state)

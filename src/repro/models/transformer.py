@@ -1,0 +1,431 @@
+"""LM assembler: builds any assigned architecture from its ArchConfig.
+
+Layers are grouped into homogeneous *segments* (``ArchConfig.segments``) and
+scanned with stacked parameters — HLO size stays O(distinct block kinds), not
+O(num_layers), which keeps the 512-device dry-run compile tractable even for
+the 94-layer / 88-layer configs.
+
+API (all pure functions):
+
+  init_params(cfg, key)                         -> params pytree
+  forward(params, cfg, tokens, ...)             -> logits [B,T,V]
+  loss_fn(params, cfg, batch)                   -> (loss, metrics)
+  init_cache(cfg, batch, max_len)               -> decode cache pytree
+  prefill(params, cfg, tokens, cache)           -> (last_logits, cache, offset)
+  decode_step(params, cfg, token, cache, offset)-> (logits, cache)
+
+The loss is sequence-chunked (logits for 512 tokens at a time under
+jax.checkpoint) so a 129k-vocab train step never materializes [B,T,V].
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from . import layers as L
+from . import ssm as S
+from . import act_sharding as ACT
+
+LOSS_CHUNK = 512
+
+# Rematerialization policy for the layer scan: "block" checkpoints each
+# scanned unit (classic layer-remat: activations recomputed in backward),
+# "dots" saves matmul outputs only, "none" stores everything.  Set by the
+# trainer / dry-run driver; a policy knob, not an architecture property.
+_REMAT = "block"
+
+
+def set_remat(mode: str) -> None:
+    global _REMAT
+    if mode not in ("none", "block", "dots"):
+        raise ValueError(mode)
+    _REMAT = mode
+
+
+def _maybe_remat(fn):
+    if _REMAT == "none":
+        return fn
+    if _REMAT == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+ATTN_KINDS = ("attn", "attn_moe", "local", "global")
+MLA_KINDS = ("mla", "mla_moe")
+MAMBA_KINDS = ("mamba", "mamba_moe")
+XLSTM_KINDS = ("mlstm", "slstm")
+MOE_KINDS = ("attn_moe", "mla_moe", "mamba_moe")
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ArchConfig, kind: str):
+    dt = L._dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    if kind in ATTN_KINDS:
+        p["norm1"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, dt)
+    elif kind in MLA_KINDS:
+        p["norm1"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["attn"] = L.init_mla(ks[0], cfg)
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, dt)
+    elif kind in MAMBA_KINDS:
+        p["norm1"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["mamba"] = S.init_mamba(ks[0], cfg)
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, dt)
+    elif kind == "mlstm":
+        return {"cell": S.init_mlstm(ks[0], cfg)}
+    elif kind == "slstm":
+        return {"cell": S.init_slstm(ks[0], cfg)}
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+
+    if cfg.norm_style == "sandwich":
+        p["post1"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["post2"] = L.init_rmsnorm(cfg.d_model, dt)
+
+    if kind in MOE_KINDS:
+        p["ffn"] = L.init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def apply_block(p, cfg: ArchConfig, kind: str, h, *, positions,
+                cache=None, offset=None, prefix_len=None):
+    """Returns (h, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in XLSTM_KINDS:
+        fwd = S.mlstm_forward if kind == "mlstm" else S.slstm_forward
+        h, new_state = fwd(p["cell"], cfg, h, cache)
+        return h, new_state, aux
+
+    sandwich = cfg.norm_style == "sandwich"
+
+    # --- mixer (attention / MLA / mamba) ---
+    x = L.rms_norm(p["norm1"], h, cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        window = cfg.sliding_window if kind == "local" else None
+        mix, new_cache = L.apply_attention(
+            p["attn"], cfg, x, positions=positions, kv_cache=cache,
+            cache_offset=offset, window=window, prefix_len=prefix_len)
+    elif kind in MLA_KINDS:
+        mix, new_cache = L.apply_mla(p["attn"], cfg, x, positions=positions,
+                                     kv_cache=cache, cache_offset=offset)
+    else:  # mamba
+        mix, new_cache = S.mamba_forward(p["mamba"], cfg, x, cache)
+    if sandwich:
+        mix = L.rms_norm(p["post1"], mix, cfg.norm_eps)
+    h = h + mix
+
+    # --- FFN / MoE ---
+    x = L.rms_norm(p["norm2"], h, cfg.norm_eps)
+    if kind in MOE_KINDS:
+        y, aux = L.apply_moe(p["ffn"], cfg, x)
+    else:
+        y = L.apply_mlp(p["ffn"], cfg, x)
+    if sandwich:
+        y = L.rms_norm(p["post2"], y, cfg.norm_eps)
+    h = h + y
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int):
+    dt = L._dtype(cfg)
+    if kind in ATTN_KINDS:
+        hkv, dh = cfg.num_kv_heads, cfg.head_dim
+        z = lambda *s: jnp.zeros(s, dt)
+        return {"k": z(batch, max_len, hkv, dh), "v": z(batch, max_len, hkv, dh)}
+    if kind in MLA_KINDS:
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((batch, max_len, 1, m.qk_rope_head_dim), dt)}
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    if kind in MAMBA_KINDS:
+        return {"conv": jnp.zeros((batch, s.d_conv - 1, d_in), dt),
+                "h": jnp.zeros((batch, d_in, s.d_state), jnp.float32)}
+    if kind == "mlstm":
+        nh, dh = s.num_heads, d_in // s.num_heads
+        return {"conv": jnp.zeros((batch, s.d_conv - 1, d_in), dt),
+                "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, nh, dh), jnp.float32),
+                "m": jnp.zeros((batch, nh), jnp.float32)}
+    if kind == "slstm":
+        D = cfg.d_model
+        z = lambda: jnp.zeros((batch, D), jnp.float32)
+        return {"conv": jnp.zeros((batch, s.d_conv - 1, D), dt),
+                "c": z(), "n": z(), "h": z(), "m": z()}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Per-segment stacked caches: leading dim = segment repeat count."""
+    caches = []
+    for unit, reps in cfg.segments():
+        unit_cache = {f"l{j}": _block_cache(cfg, kind, batch, max_len)
+                      for j, kind in enumerate(unit)}
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape).copy(),
+            unit_cache))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    dt = L._dtype(cfg)
+    keys = jax.random.split(key, 8)
+    V, D = cfg.vocab_size, cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (V, D), jnp.float32)
+                  * 0.02).astype(dt),
+        "final_norm": L.init_rmsnorm(D, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L._init_dense(keys[1], D, V, dt,
+                                       scale=1.0 / math.sqrt(D))
+    if cfg.frontend:
+        fd = cfg.frontend_dim or D
+        params["frontend_proj"] = L._init_dense(keys[2], fd, D, dt)
+    if cfg.pos_embed == "sinusoidal":
+        pass  # non-learned
+
+    segs = []
+    seg_key = keys[3]
+    for unit, reps in cfg.segments():
+        seg_key, sub = jax.random.split(seg_key)
+        unit_keys = jax.random.split(sub, reps)
+
+        def init_unit(k, unit=unit):
+            uks = jax.random.split(k, len(unit))
+            return {f"l{j}": init_block(uks[j], cfg, kind)
+                    for j, kind in enumerate(unit)}
+
+        segs.append(jax.vmap(init_unit)(unit_keys))
+    params["segments"] = segs
+
+    if cfg.mtp_depth:
+        mtp_keys = jax.random.split(keys[4], cfg.mtp_depth)
+        params["mtp"] = [
+            {"proj": L._init_dense(mtp_keys[i], 2 * D, D, dt),
+             "block": init_block(jax.random.fold_in(mtp_keys[i], 7), cfg,
+                                 "mla" if cfg.mla else "attn"),
+             "norm": L.init_rmsnorm(D, dt)}
+            for i in range(cfg.mtp_depth)]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ArchConfig, tokens, frontend_embeds=None,
+           positions=None):
+    h = params["embed"][tokens]
+    if cfg.embed_scale:
+        h = h * math.sqrt(cfg.d_model)
+    if cfg.frontend and frontend_embeds is not None:
+        pre = L.dense(params["frontend_proj"], frontend_embeds.astype(h.dtype))
+        h = jnp.concatenate([pre, h], axis=1)
+    if cfg.pos_embed == "sinusoidal":
+        if positions is None:
+            positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+        pe = L.sinusoidal_pos(positions, cfg.d_model).astype(h.dtype)
+        h = h + (pe[None] if pe.ndim == 2 else pe)
+    return ACT.hidden(h)
+
+
+def _run_segments(params, cfg: ArchConfig, h, *, positions, caches=None,
+                  offset=None, prefix_len=None):
+    """Scan each segment's stacked unit over its repeats."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, (unit, reps) in enumerate(cfg.segments()):
+        seg_params = params["segments"][si]
+        seg_cache = None if caches is None else caches[si]
+
+        def body(h, xs, unit=unit):
+            p_unit, c_unit = xs
+            aux_sum = jnp.zeros((), jnp.float32)
+            new_c = {}
+            for j, kind in enumerate(unit):
+                c = None if c_unit is None else c_unit[f"l{j}"]
+                h, nc, aux = apply_block(
+                    p_unit[f"l{j}"], cfg, kind, h, positions=positions,
+                    cache=c, offset=offset, prefix_len=prefix_len)
+                new_c[f"l{j}"] = nc
+                aux_sum = aux_sum + aux
+            return ACT.hidden(h), (new_c, aux_sum)
+
+        if seg_cache is None:
+            # drop per-layer cache outputs to keep train HLO lean
+            def body_nocache(h, p_unit, unit=unit):
+                h, (_, aux_sum) = body(h, (p_unit, None), unit=unit)
+                return h, aux_sum
+            h, auxs = lax.scan(_maybe_remat(body_nocache), h, seg_params)
+            new_caches.append(None)
+        else:
+            h, (ncache, auxs) = lax.scan(body, h, (seg_params, seg_cache))
+            new_caches.append(ncache)
+        aux_total = aux_total + jnp.sum(auxs)
+    return h, new_caches, aux_total
+
+
+def forward(params, cfg: ArchConfig, tokens, frontend_embeds=None,
+            positions=None):
+    """Full-sequence logits (small vocab / small T only — training uses
+    ``loss_fn`` which chunks the head)."""
+    h = _embed(params, cfg, tokens, frontend_embeds)
+    T = h.shape[1]
+    if positions is None:
+        positions = jnp.arange(T, dtype=jnp.int32)
+    prefix_len = cfg.frontend_tokens if cfg.prefix_lm else None
+    h, _, aux = _run_segments(params, cfg, h, positions=positions,
+                              prefix_len=prefix_len)
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = _head(params, cfg, h)
+    return logits
+
+
+def _head(params, cfg: ArchConfig, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]["w"]
+    logits = ACT.logits((h @ w).astype(jnp.float32))
+    return L.softcap(logits, cfg.logit_softcap)
+
+
+def _chunked_xent(params, cfg: ArchConfig, h, labels, mask):
+    """Sequence-chunked cross-entropy: logits never exceed [B,chunk,V]."""
+    B, T, D = h.shape
+    chunk = min(LOSS_CHUNK, T)
+    n_chunks = -(-T // chunk)
+    pad = n_chunks * chunk - T
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = h.reshape(B, n_chunks, chunk, D)
+    lc = labels.reshape(B, n_chunks, chunk)
+    mc = mask.reshape(B, n_chunks, chunk)
+
+    @jax.checkpoint
+    def chunk_loss(h_j, l_j, m_j):
+        logits = _head(params, cfg, h_j)               # [B,chunk,V] f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_j[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m_j
+        return jnp.sum(nll), jnp.sum(m_j)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        s, c = chunk_loss(*xs)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0),
+         jnp.moveaxis(mc, 1, 0)))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch) -> Tuple[jax.Array, Dict]:
+    """batch: {tokens [B,T], labels [B,T], (frontend [B,Tf,Df])}.
+
+    labels < 0 are masked. Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    h = _embed(params, cfg, tokens, batch.get("frontend"))
+    T = h.shape[1]
+    positions = jnp.arange(T, dtype=jnp.int32)
+    prefix_len = cfg.frontend_tokens if cfg.prefix_lm else None
+    h, _, aux = _run_segments(params, cfg, h, positions=positions,
+                              prefix_len=prefix_len)
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+
+    if cfg.frontend and batch.get("frontend") is not None:
+        h_txt = h[:, cfg.frontend_tokens:]
+    else:
+        h_txt = h
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    loss = _chunked_xent(params, cfg, h_txt, labels_safe, mask)
+    metrics = {"xent": loss, "aux": aux}
+
+    if cfg.mtp_depth and "mtp" in params:
+        # DeepSeek MTP: module i predicts token t+1+i from [h_t ; emb_{t+i}]
+        mtp_loss = jnp.zeros((), jnp.float32)
+        h_cur = h_txt
+        for i, mod in enumerate(params["mtp"]):
+            emb_next = params["embed"][tokens[:, 1 + i:]]
+            h_in = jnp.concatenate(
+                [h_cur[:, :emb_next.shape[1]],
+                 emb_next.astype(h_cur.dtype)], axis=-1)
+            h_i = L.dense(mod["proj"], h_in)
+            kind = "mla" if cfg.mla else "attn"
+            pos_i = jnp.arange(h_i.shape[1], dtype=jnp.int32)
+            h_i, _, _ = apply_block(mod["block"], cfg, kind, h_i,
+                                    positions=pos_i)
+            h_i = L.rms_norm(mod["norm"], h_i, cfg.norm_eps)
+            lbl_i = labels[:, 1 + i:]
+            msk_i = (lbl_i >= 0).astype(jnp.float32)
+            mtp_loss = mtp_loss + _chunked_xent(
+                params, cfg, h_i, jnp.maximum(lbl_i, 0), msk_i)
+            h_cur = h_i
+        loss = loss + cfg.mtp_loss_weight * mtp_loss / cfg.mtp_depth
+        metrics["mtp"] = mtp_loss
+
+    if cfg.moe:
+        loss = loss + 0.01 * aux
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# inference: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ArchConfig, tokens, cache, frontend_embeds=None):
+    """Fill the cache with the prompt; logits for the last position only."""
+    h = _embed(params, cfg, tokens, frontend_embeds)
+    T = h.shape[1]
+    positions = jnp.arange(T, dtype=jnp.int32)
+    prefix_len = cfg.frontend_tokens if cfg.prefix_lm else None
+    offset = jnp.zeros((), jnp.int32)
+    h, new_caches, _ = _run_segments(params, cfg, h, positions=positions,
+                                     caches=cache, offset=offset,
+                                     prefix_len=prefix_len)
+    h_last = L.rms_norm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    return _head(params, cfg, h_last), new_caches, jnp.array(T, jnp.int32)
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, offset):
+    """token: [B,1] ints; offset: scalar tokens-already-cached."""
+    B = token.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(offset)[None, None],
+                                 (B, 1)).astype(jnp.int32)
+    h = _embed(params, cfg, token, positions=positions)
+    h, new_caches, _ = _run_segments(params, cfg, h, positions=positions,
+                                     caches=cache, offset=offset)
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    return _head(params, cfg, h), new_caches

@@ -1,0 +1,114 @@
+"""AdamW optimizer (built in-repo: no optax in this container).
+
+Production knobs used by the trainer and the dry-run memory budget:
+
+  * ``state_dtype``  — f32 (default) or bf16 moments: at 671B parameters the
+    moment dtype decides whether a pod fits (EXPERIMENTS.md §Dry-run).
+  * global-norm clipping, decoupled weight decay, linear-warmup cosine decay.
+  * The update is a pure function of (grads, state) — it runs inside the BSP
+    superstep after ``sync_gradients`` so every rank applies identical math.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: Any = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any      # first-moment pytree
+    nu: Any      # second-moment pytree
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def schedule(step: jax.Array, cfg: AdamWConfig) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio·lr."""
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(params, grads, state: AdamWState, cfg: AdamWConfig
+                  ) -> Tuple[Any, AdamWState, dict]:
+    """One AdamW step; returns (params', state', metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = schedule(state.step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, n):
+        m32, n32 = m.astype(jnp.float32), n.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * g
+        n_new = b2 * n32 + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        nhat = n_new / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(cfg.state_dtype),
+                n_new.astype(cfg.state_dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_n = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_m, flat_n)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_n = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_n), metrics
+
+
+def optimizer_bytes_per_param(cfg: AdamWConfig, param_dtype=jnp.bfloat16) -> int:
+    """Dry-run memory budget helper: param + grad + 2 moments."""
+    pb = jnp.dtype(param_dtype).itemsize
+    sb = jnp.dtype(cfg.state_dtype).itemsize
+    return pb + pb + 2 * sb

@@ -1,0 +1,127 @@
+"""Fault tolerance + straggler mitigation for BSP training.
+
+BSP's weakness at scale is that the barrier waits for the slowest rank; the
+paper makes the barrier itself ~free, which moves the problem to (a) dead
+hosts and (b) stragglers.  This module provides the control-plane pieces,
+exercised in tests and by examples/fault_tolerance_demo.py:
+
+  * ``HostMonitor``    — heartbeat registry with timeout-based failure
+    detection (the NoC-level 'error' wire analogue at cluster scope).
+  * ``StragglerTracker`` — per-rank superstep durations; flags ranks slower
+    than ``threshold × median`` over a window and computes a proportional
+    micro-batch rebalance (gradient contributions stay weighted-correct).
+  * ``surviving_domain`` — the FractalSync-native recovery policy: after
+    failures, find the LARGEST complete synchronization subtree (fsync
+    level/domain) containing no failed leaf; training resumes scoped to that
+    domain while replacements spin up.  This is the paper's programmable
+    sync-domain feature doing elastic scaling (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import math
+import statistics
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.core.tree import FractalTree
+
+Coord = Tuple[int, ...]
+
+
+@dataclass
+class HostMonitor:
+    num_hosts: int
+    timeout_s: float = 30.0
+    last_seen: Dict[int, float] = field(default_factory=dict)
+
+    def heartbeat(self, host: int, now: Optional[float] = None) -> None:
+        if not 0 <= host < self.num_hosts:
+            raise ValueError(f"host {host} outside 0..{self.num_hosts - 1}")
+        self.last_seen[host] = time.monotonic() if now is None else now
+
+    def failed_hosts(self, now: Optional[float] = None) -> Set[int]:
+        now = time.monotonic() if now is None else now
+        out = set()
+        for h in range(self.num_hosts):
+            seen = self.last_seen.get(h)
+            if seen is None or now - seen > self.timeout_s:
+                out.add(h)
+        return out
+
+    def healthy(self, now: Optional[float] = None) -> bool:
+        return not self.failed_hosts(now)
+
+
+@dataclass
+class StragglerTracker:
+    window: int = 16
+    threshold: float = 1.5
+    durations: Dict[int, deque] = field(
+        default_factory=lambda: defaultdict(lambda: deque(maxlen=16)))
+
+    def record(self, rank: int, superstep_s: float) -> None:
+        d = self.durations[rank]
+        if d.maxlen != self.window:
+            d = deque(d, maxlen=self.window)
+            self.durations[rank] = d
+        d.append(superstep_s)
+
+    def rank_speed(self, rank: int) -> Optional[float]:
+        d = self.durations.get(rank)
+        return statistics.median(d) if d else None
+
+    def stragglers(self) -> Set[int]:
+        speeds = {r: statistics.median(d)
+                  for r, d in self.durations.items() if d}
+        if len(speeds) < 2:
+            return set()
+        med = statistics.median(speeds.values())
+        return {r for r, s in speeds.items() if s > self.threshold * med}
+
+    def rebalanced_shares(self, ranks: Sequence[int],
+                          total_microbatches: int) -> Dict[int, int]:
+        """Micro-batches ∝ 1/median-duration, ≥1 each, summing to total.
+
+        In BSP the superstep ends at max(rank time); giving slow ranks fewer
+        micro-batches flattens the barrier-arrival distribution — the same
+        Ŝ = max(F) − max(R) metric the paper optimizes, attacked from the
+        arrival side."""
+        speeds = {}
+        for r in ranks:
+            m = self.rank_speed(r)
+            speeds[r] = 1.0 / m if m else 1.0
+        total_speed = sum(speeds.values())
+        shares = {r: max(1, int(round(total_microbatches * s / total_speed)))
+                  for r, s in speeds.items()}
+        # fix rounding drift deterministically (fastest ranks absorb it)
+        order = sorted(ranks, key=lambda r: -speeds[r])
+        i = 0
+        while sum(shares.values()) > total_microbatches:
+            r = order[i % len(order)]
+            if shares[r] > 1:
+                shares[r] -= 1
+            i += 1
+        i = 0
+        while sum(shares.values()) < total_microbatches:
+            shares[order[i % len(order)]] += 1
+            i += 1
+        return shares
+
+
+def surviving_domain(tree: FractalTree, failed: Iterable[Coord]
+                     ) -> Tuple[int, Tuple[Coord, ...]]:
+    """Largest complete sync subtree (fsync level + member tiles) avoiding
+    every failed leaf.  Returns (level, tiles); level 0 = a single tile."""
+    failed = set(failed)
+    alive = [t for t in tree.tiles() if t not in failed]
+    if not alive:
+        raise RuntimeError("no surviving tiles")
+    best: Tuple[int, Tuple[Coord, ...]] = (0, (alive[0],))
+    for level in range(tree.num_levels, 0, -1):
+        for domain in tree.domains(level):
+            if not failed.intersection(domain):
+                return level, domain
+    return best

@@ -1,0 +1,117 @@
+"""The BSP training loop: data → superstep → checkpoint → monitor.
+
+Glues the substrate together for real (CPU-device) runs: examples/train_lm.py
+drives ~100M-param models for hundreds of steps through this loop.  The same
+loop shape runs at pod scale — the pieces that change (mesh size, per-host
+data sharding, real heartbeats) are injected.
+
+Responsibilities per step:
+  1. pull a prefetched host batch; device_put with batch shardings,
+  2. run the jit'd superstep (gradient sync via the configured schedule),
+  3. record per-rank durations → straggler tracker,
+  4. periodic async checkpoint (exact-resume metadata: data step, RNG),
+  5. on monitor-reported failure: raise ``WorkerFailure`` for the elastic
+     driver (examples/fault_tolerance_demo.py shows the recover path).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointing import CheckpointManager
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from repro.runtime.fault_tolerance import HostMonitor, StragglerTracker
+
+
+class WorkerFailure(RuntimeError):
+    def __init__(self, failed_hosts):
+        super().__init__(f"failed hosts: {sorted(failed_hosts)}")
+        self.failed_hosts = failed_hosts
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+
+
+@dataclass
+class TrainLoop:
+    step_fn: Callable                     # (state..., batch) -> (state..., metrics)
+    state: tuple                          # step-fn carry (params, opt, ...)
+    data: SyntheticLM
+    cfg: LoopConfig
+    batch_shardings: Any = None
+    monitor: Optional[HostMonitor] = None
+    stragglers: StragglerTracker = field(default_factory=StragglerTracker)
+    start_step: int = 0
+    history: list = field(default_factory=list)
+
+    def run(self) -> Dict[str, Any]:
+        ckpt = (CheckpointManager(self.cfg.checkpoint_dir,
+                                  keep=self.cfg.keep_checkpoints)
+                if self.cfg.checkpoint_dir else None)
+        prefetch = Prefetcher(self.data, start_step=self.start_step)
+        state = self.state
+        step = self.start_step
+        try:
+            while step < self.cfg.total_steps:
+                data_step, host_batch = prefetch.next()
+                assert data_step == step, (data_step, step)
+                batch = self._place(host_batch)
+                t0 = time.monotonic()
+                *state_parts, metrics = self.step_fn(*state, batch)
+                state = tuple(state_parts)
+                jax.block_until_ready(state[0])
+                dt = time.monotonic() - t0
+                self.stragglers.record(0, dt)
+
+                if self.monitor is not None:
+                    failed = self.monitor.failed_hosts()
+                    if failed:
+                        raise WorkerFailure(failed)
+
+                loss = float(np.asarray(metrics.get("loss", np.nan)))
+                self.history.append({"step": step, "loss": loss, "sec": dt})
+                if self.cfg.log_every and step % self.cfg.log_every == 0:
+                    print(f"step {step:5d} loss {loss:8.4f} {dt*1e3:7.1f} ms",
+                          flush=True)
+                step += 1
+                if ckpt and step % self.cfg.checkpoint_every == 0:
+                    ckpt.save(step, state, meta={"data_step": step})
+        finally:
+            prefetch.close()
+            if ckpt:
+                ckpt.wait()
+        if ckpt and step % self.cfg.checkpoint_every != 0:
+            ckpt.save(step, state, meta={"data_step": step}, blocking=True)
+        self.state = state
+        return {"final_step": step, "history": self.history}
+
+    def _place(self, host_batch):
+        if self.batch_shardings is None:
+            return {k: jax.numpy.asarray(v) for k, v in host_batch.items()}
+        return {
+            k: jax.device_put(v, self.batch_shardings[k])
+            for k, v in host_batch.items()
+        }
+
+
+def resume_or_init(ckpt_dir: Optional[str], like_state):
+    """(state, start_step) — restored from the latest checkpoint if any."""
+    if not ckpt_dir:
+        return like_state, 0
+    mgr = CheckpointManager(ckpt_dir)
+    out = mgr.restore(like_state)
+    if out is None:
+        return like_state, 0
+    state, meta = out
+    return state, int(meta.get("data_step", meta.get("step", 0)))

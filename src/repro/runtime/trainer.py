@@ -1,0 +1,288 @@
+"""BSP training step builders.
+
+Two tiers (DESIGN.md §4):
+
+  * ``make_gspmd_train_step`` — jit + GSPMD: parameters FSDP×TP sharded
+    (ZeRO-3 style), gradient reduction scheduled by XLA.  This is the
+    baseline every (arch × shape) dry-run cell uses.
+
+  * ``make_bsp_train_step`` — the paper's technique as a first-class feature:
+    the whole step runs inside ``shard_map`` with the DP axes *manual* and the
+    model axis auto (TP stays GSPMD).  Parameters are DP-replicated; gradients
+    are flattened and pushed through the explicit FractalSync-family schedule
+    (fractal | ring | xy | naive | hierarchical, ± payload compression);
+    optimizer moments are ZeRO-1 sharded over the flat vector — each BSP rank
+    updates 1/world of the parameters between the fractal reduce-scatter and
+    all-gather (the bandwidth-optimal H-tree form), then the fsync barrier
+    closes the superstep.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core import collectives as C
+from repro.core.barrier import barrier_tie
+from repro.core.bsp import BSPConfig, bsp_shard_map, make_codec
+from repro.models import act_sharding as ACT
+from repro.models import sharding as SH
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.optim.compression import error_feedback_step
+
+
+# ---------------------------------------------------------------------------
+# Tier A: GSPMD (baseline for all dry-run cells)
+# ---------------------------------------------------------------------------
+
+
+def make_gspmd_train_step(cfg: ArchConfig, mesh: Mesh,
+                          acfg: adamw.AdamWConfig):
+    """jit'd (params, opt_state, batch) → (params, opt_state, metrics)."""
+    ACT.set_policy(mesh, SH.fsdp_axes(mesh))
+    ACT.SERVE_EP = False
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            T.loss_fn, has_aux=True)(params, cfg, batch)
+        params, opt_state, om = adamw.apply_updates(params, grads, opt_state,
+                                                    acfg)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    pshape = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.key(0))
+    pspec = SH.param_specs(cfg, pshape, mesh)
+    oshape = jax.eval_shape(lambda: adamw.init(pshape, acfg))
+    ospec = adamw.AdamWState(step=P(), mu=pspec, nu=pspec)
+    bspec_all = SH.batch_spec(mesh)
+    bspec = {"tokens": bspec_all["tokens"], "labels": bspec_all["labels"]}
+    if cfg.frontend:
+        bspec["frontend"] = bspec_all["frontend"]
+
+    n = lambda s: SH.named(mesh, s)
+    step = jax.jit(
+        train_step,
+        in_shardings=(n(pspec), n(ospec), n(bspec)),
+        out_shardings=(n(pspec), n(ospec), None),
+        donate_argnums=(0, 1),
+    )
+    return step, (pspec, ospec, bspec)
+
+
+# ---------------------------------------------------------------------------
+# Tier A: serving steps (prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _serve_mode(cfg: ArchConfig) -> str:
+    """MoE archs serve with pinned weights (TP+EP: tokens move, weights
+    stay) — 35-41× on the big-MoE cells; small dense archs keep the FSDP
+    layout whose per-layer weight gather is cheaper than 16× the HBM reads
+    (measured: musicgen/granite serve_layout variants, EXPERIMENTS §Perf)."""
+    return "serve" if cfg.moe else "train"
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh, batch: int, max_len: int):
+    ACT.set_policy(mesh, SH.fsdp_axes(mesh))
+    ACT.SERVE_EP = cfg.moe is not None
+
+    def prefill_step(params, tokens, cache, frontend=None):
+        return T.prefill(params, cfg, tokens, cache, frontend)
+
+    pshape = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.key(0))
+    pspec = SH.param_specs(cfg, pshape, mesh, mode=_serve_mode(cfg))
+    cshape = jax.eval_shape(lambda: T.init_cache(cfg, batch, max_len))
+    cspec = SH.cache_specs(cfg, cshape, mesh)
+    dp = SH.fsdp_axes(mesh)
+    if batch % SH.axis_size(mesh, dp):
+        dp = ()
+    n = lambda s: SH.named(mesh, s)
+    in_sh = [n(pspec), NamedSharding(mesh, P(dp or None, None)), n(cspec)]
+    if cfg.frontend:
+        in_sh.append(NamedSharding(mesh, P(dp, None, None)))
+    step = jax.jit(prefill_step, in_shardings=tuple(in_sh),
+                   out_shardings=(None, n(cspec), None),
+                   donate_argnums=(2,))
+    return step, (pspec, cspec)
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Mesh, batch: int, max_len: int):
+    ACT.set_policy(mesh, SH.fsdp_axes(mesh))
+    ACT.SERVE_EP = cfg.moe is not None
+
+    def serve_step(params, token, cache, offset):
+        logits, cache = T.decode_step(params, cfg, token, cache, offset)
+        return logits, cache
+
+    pshape = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.key(0))
+    pspec = SH.param_specs(cfg, pshape, mesh, mode=_serve_mode(cfg))
+    cshape = jax.eval_shape(lambda: T.init_cache(cfg, batch, max_len))
+    cspec = SH.cache_specs(cfg, cshape, mesh)
+    dp = SH.fsdp_axes(mesh)
+    if batch % SH.axis_size(mesh, dp):
+        dp = ()                      # long_500k: global batch 1
+    n = lambda s: SH.named(mesh, s)
+    step = jax.jit(
+        serve_step,
+        in_shardings=(n(pspec), NamedSharding(mesh, P(dp or None, None)),
+                      n(cspec), NamedSharding(mesh, P())),
+        out_shardings=(None, n(cspec)),
+        donate_argnums=(2,),
+    )
+    return step, (pspec, cspec)
+
+
+# ---------------------------------------------------------------------------
+# Tier B: explicit BSP superstep (the paper's technique, first-class)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BSPTrainState:
+    params: Any                # DP-replicated pytree (TP-sharded on "model")
+    flat_mu: jax.Array         # ZeRO-1: this rank's shard of flat moments
+    flat_nu: jax.Array
+    ef_residual: Optional[jax.Array]   # error-feedback state (compression)
+    step: jax.Array
+
+
+def _flat_len(pshape, world: int, align: int) -> int:
+    n = sum(int(math.prod(l.shape)) for l in jax.tree.leaves(pshape))
+    unit = world * align
+    return ((n + unit - 1) // unit) * unit
+
+
+def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
+                        bsp: BSPConfig):
+    """Explicit-schedule BSP superstep:
+
+      compute:     local fwd/bwd on this rank's micro-batch
+      communicate: flat grads → [EF] → fractal reduce-scatter (or full
+                   schedule) with optional payload compression
+      update:      AdamW on this rank's 1/world flat shard (ZeRO-1)
+      publish:     fractal all-gather of updated params
+      barrier:     fsync(level) token tied into outputs
+    """
+    ACT.clear_policy()   # manual-DP body: no data-axis GSPMD constraints
+    sizes = tuple(mesh.shape[a] for a in bsp.sync_axes)
+    world = math.prod(sizes)
+    codec = make_codec(bsp.compression)
+
+    def local_step(params, flat_mu, flat_nu, ef, step, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            T.loss_fn, has_aux=True)(params, cfg, batch)
+        # report the GLOBAL mean loss (each rank saw its own micro-batch)
+        loss = jax.lax.psum(loss, bsp.sync_axes) / world
+        metrics = jax.tree.map(
+            lambda v: jax.lax.psum(v, bsp.sync_axes) / world, metrics)
+        flat_g, unravel = ravel_pytree(
+            jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+        n = flat_g.shape[0]
+        padded = _flat_len(grads, world, bsp.pad_align)
+        flat_g = jnp.concatenate(
+            [flat_g, jnp.zeros((padded - n,), jnp.float32)])
+
+        if codec is not None and ef is not None:
+            flat_g, ef = error_feedback_step(flat_g, ef, codec)
+
+        # After recursive-halving RS, rank i holds the CONTIGUOUS chunk at
+        # bit-reversed position rev(i) (coarsest split decided by bit 0).
+        idx = C.flat_index(bsp.sync_axes)
+        L = int(math.log2(world))
+        rev = jnp.zeros((), jnp.int32)
+        for b in range(L):
+            rev = rev | (((idx >> b) & 1) << (L - 1 - b))
+        shard_len = padded // world
+
+        # --- communicate: fractal reduce-scatter (H-tree, halving) ---------
+        if bsp.schedule == "fractal":
+            g_shard = C.fractal_reduce_scatter(flat_g, bsp.sync_axes, sizes,)
+        else:
+            full = C.all_reduce(flat_g, bsp.schedule, bsp.sync_axes, sizes)
+            g_shard = jax.lax.dynamic_slice_in_dim(
+                full, rev * shard_len, shard_len)
+        g_shard = g_shard / world
+
+        # --- ZeRO-1 update on this rank's flat shard ------------------------
+        flat_p, _ = ravel_pytree(
+            jax.tree.map(lambda p: p.astype(jnp.float32), params))
+        flat_p = jnp.concatenate(
+            [flat_p, jnp.zeros((padded - n,), jnp.float32)])
+        p_shard = jax.lax.dynamic_slice_in_dim(flat_p, rev * shard_len,
+                                               shard_len)
+        new_p, new_mu, new_nu, om = _adamw_flat(
+            p_shard, g_shard, flat_mu, flat_nu, step, acfg)
+
+        # --- publish: fractal all-gather of the updated shards -------------
+        # all-gather inverts the reduce-scatter placement, so the flat layout
+        # comes back in original order
+        flat_new = C.fractal_all_gather(new_p, bsp.sync_axes, sizes)
+        params = jax.tree.map(lambda x, ref: x.astype(ref.dtype),
+                              unravel(flat_new[:n]), params)
+
+        # --- fsync barrier closes the superstep -----------------------------
+        token = C.fractal_barrier(bsp.sync_axes, sizes, level=bsp.fsync_level)
+        params = jax.tree.map(lambda x: barrier_tie(x, token), params)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, new_mu, new_nu, ef, step + 1, metrics
+
+    # --- shard_map plumbing: DP manual, model auto ---------------------------
+    pshape = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.key(0))
+    rep = jax.tree.map(lambda _: P(), pshape)       # DP-replicated params
+    flat_total = _flat_len(pshape, world, bsp.pad_align)
+    shard_spec = P(bsp.sync_axes)
+    bspec = {"tokens": P(bsp.sync_axes, None),
+             "labels": P(bsp.sync_axes, None)}
+    if cfg.frontend:
+        bspec["frontend"] = P(bsp.sync_axes, None, None)
+    ef_spec = shard_spec if codec is not None else None
+
+    in_specs = (rep, shard_spec, shard_spec,
+                shard_spec if codec is not None else P(),
+                P(), bspec)
+    out_specs = (rep, shard_spec, shard_spec,
+                 shard_spec if codec is not None else P(),
+                 P(), P())
+
+    def wrapped(params, flat_mu, flat_nu, ef, step, batch):
+        return local_step(params, flat_mu, flat_nu, ef, step, batch)
+
+    fn = bsp_shard_map(wrapped, mesh, in_specs=in_specs, out_specs=out_specs,
+                       sync_axes=bsp.sync_axes)
+    # donating the pass-through ef placeholder trips XLA aliasing when the
+    # codec is off (output aliases a deleted input on the next call) — donate
+    # only the genuinely-consumed moment shards
+    step_fn = jax.jit(fn, donate_argnums=(1, 2))
+
+    def init_state(params) -> Tuple:
+        shard_len = flat_total // world
+        mu = jnp.zeros((flat_total,), jnp.float32)  # sharded by in_specs
+        nu = jnp.zeros((flat_total,), jnp.float32)
+        ef = jnp.zeros((flat_total,), jnp.float32) if codec is not None \
+            else jnp.zeros((world,), jnp.float32)   # placeholder
+        return params, mu, nu, ef, jnp.zeros((), jnp.int32)
+
+    return step_fn, init_state
+
+
+def _adamw_flat(p, g, mu, nu, step, acfg: adamw.AdamWConfig):
+    """AdamW on a flat f32 shard (global-norm clip is per-shard-approx here;
+    exact global clipping would add one scalar psum — left to the schedule)."""
+    b1, b2 = acfg.beta1, acfg.beta2
+    stepf = (step + 1).astype(jnp.float32)
+    lr = adamw.schedule(step, acfg)
+    mu = b1 * mu + (1 - b1) * g
+    nu = b2 * nu + (1 - b2) * jnp.square(g)
+    mhat = mu / (1 - b1 ** stepf)
+    nhat = nu / (1 - b2 ** stepf)
+    upd = mhat / (jnp.sqrt(nhat) + acfg.eps) + acfg.weight_decay * p
+    return p - lr * upd, mu, nu, {"lr": lr}

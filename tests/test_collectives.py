@@ -1,0 +1,22 @@
+"""Multi-device collective schedule checks (subprocess: 16 host devices)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_collective_schedules_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "collective_checks.py")],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "ALL OK" in proc.stdout

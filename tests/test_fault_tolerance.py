@@ -1,0 +1,63 @@
+"""Fault tolerance: monitor, stragglers, surviving fsync domains, elastic."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree import FractalTree
+from repro.runtime.elastic import plan_recovery
+from repro.runtime.fault_tolerance import (HostMonitor, StragglerTracker,
+                                           surviving_domain)
+
+
+def test_host_monitor_detects_timeouts():
+    m = HostMonitor(num_hosts=4, timeout_s=10.0)
+    for h in range(4):
+        m.heartbeat(h, now=100.0)
+    assert m.failed_hosts(now=105.0) == set()
+    m.heartbeat(0, now=111.0)
+    m.heartbeat(1, now=111.0)
+    assert m.failed_hosts(now=115.0) == {2, 3}
+    assert not m.healthy(now=115.0)
+
+
+def test_straggler_detection_and_rebalance():
+    t = StragglerTracker(window=8, threshold=1.5)
+    for step in range(8):
+        for rank in range(4):
+            t.record(rank, 1.0 if rank != 3 else 2.5)
+    assert t.stragglers() == {3}
+    shares = t.rebalanced_shares([0, 1, 2, 3], total_microbatches=16)
+    assert sum(shares.values()) == 16
+    assert shares[3] < shares[0]
+    assert min(shares.values()) >= 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from([(4, 4), (8, 8), (2, 4)]), st.data())
+def test_surviving_domain_properties(shape, data):
+    tree = FractalTree(shape)
+    tiles = list(tree.tiles())
+    failed = set(data.draw(st.lists(st.sampled_from(tiles), min_size=0,
+                                    max_size=len(tiles) - 1, unique=True)))
+    level, domain = surviving_domain(tree, failed)
+    assert not failed.intersection(domain)
+    assert len(domain) == tree.domain_size(level)        # complete subtree
+    # maximality: no fully-clean domain exists at level+1
+    if level < tree.num_levels:
+        for d in tree.domains(level + 1):
+            assert failed.intersection(d)
+
+
+def test_plan_recovery_scales_accumulation():
+    tree = FractalTree((4, 4))
+    plan = plan_recovery(tree, failed=[(0, 0)])
+    assert plan.world == 8
+    assert plan.grad_accum_scale == 2          # keep the global batch
+    assert np.prod(plan.mesh_shape) == plan.world
+
+
+def test_no_survivors_raises():
+    tree = FractalTree((1, 2))
+    with pytest.raises(RuntimeError):
+        surviving_domain(tree, failed=list(tree.tiles()))

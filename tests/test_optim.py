@@ -1,0 +1,93 @@
+"""Optimizer + compression codec tests (unit + hypothesis property)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw
+from repro.optim.compression import (Bf16Codec, Int8Codec,
+                                     error_feedback_step, quantization_error)
+
+
+def test_adamw_converges_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                            total_steps=200, grad_clip=0)
+    target = jnp.asarray([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw.apply_updates(params, grads, state, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    lrs = [float(adamw.schedule(jnp.asarray(s), cfg)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0 + 1e-6
+    assert lrs[-1] == pytest.approx(0.1, rel=0.05)
+    assert max(lrs) <= 1.0 + 1e-6
+
+
+def test_bf16_moments_memory():
+    cfg32 = adamw.AdamWConfig(state_dtype=jnp.float32)
+    cfg16 = adamw.AdamWConfig(state_dtype=jnp.bfloat16)
+    assert adamw.optimizer_bytes_per_param(cfg16) < \
+        adamw.optimizer_bytes_per_param(cfg32)
+    params = {"w": jnp.zeros((8,), jnp.bfloat16)}
+    st16 = adamw.init(params, cfg16)
+    assert st16.mu["w"].dtype == jnp.bfloat16
+
+
+# ------------------------------------------------------------ codecs -----
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 7), st.floats(0.1, 100.0))
+def test_int8_codec_error_bound(blocks, scale):
+    rng = np.random.default_rng(blocks)
+    x = jnp.asarray(rng.normal(size=(blocks * 128,)).astype(np.float32)
+                    * scale)
+    codec = Int8Codec()
+    err = quantization_error(x, codec)
+    # per-block max error ≤ blockmax/127/2 … ≤ blockmax/127 with rounding
+    xb = np.asarray(x).reshape(blocks, 128)
+    bound = np.repeat(np.abs(xb).max(1) / 127.0, 128) * 0.5 + 1e-7
+    assert (np.abs(np.asarray(err)) <= bound + 1e-6).all()
+
+
+def test_bf16_codec_roundtrip():
+    x = jnp.asarray(np.linspace(-3, 3, 256, dtype=np.float32))
+    codec = Bf16Codec()
+    err = quantization_error(x, codec)
+    assert float(jnp.max(jnp.abs(err))) < 0.02
+    assert codec.encode(x)["x"].dtype == jnp.bfloat16
+
+
+def test_error_feedback_unbiased_over_time():
+    """EF: the running sum of transmitted values tracks the running sum of
+    true gradients (residual stays bounded)."""
+    rng = np.random.default_rng(0)
+    codec = Int8Codec()
+    residual = jnp.zeros((256,), jnp.float32)
+    true_sum = np.zeros(256)
+    sent_sum = np.zeros(256)
+    for step in range(50):
+        g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+        corrected, residual = error_feedback_step(g, residual, codec)
+        sent = corrected - residual        # what the wire actually carries
+        true_sum += np.asarray(g)
+        sent_sum += np.asarray(sent)
+        np.testing.assert_allclose(sent_sum + np.asarray(residual), true_sum,
+                                   rtol=1e-4, atol=1e-4)
+    assert np.abs(np.asarray(residual)).max() < 0.2

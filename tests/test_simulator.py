@@ -1,0 +1,103 @@
+"""Table 1 reproduction: FSync exact, AMO baselines calibrated, speedups."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simulator import (DEFAULT_PARAMS, FractalSyncSim,
+                                  NaiveBarrier, PAPER_TABLE1, XYBarrier,
+                                  simulate_config, table1)
+from repro.core.tree import FractalTree
+
+
+@pytest.fixture(scope="module")
+def t1():
+    return table1()
+
+
+def test_fsync_columns_exact(t1):
+    for name, row in t1.items():
+        fsync, fsync_p, *_ = PAPER_TABLE1[name]
+        assert row["fsync"] == fsync, name
+        assert row["fsync_p"] == fsync_p, name
+
+
+def test_amo_baselines_within_band(t1):
+    # calibrated event sim: every AMO number within [0.6, 1.45]× of paper
+    for name, row in t1.items():
+        _, _, naive, xy, _ = PAPER_TABLE1[name]
+        assert 0.6 <= row["naive"] / naive <= 1.45, (name, row["naive"], naive)
+        assert 0.6 <= row["xy"] / xy <= 1.45, (name, row["xy"], xy)
+
+
+def test_speedup_reproduced(t1):
+    # headline claims: ≥15× everywhere, growing with mesh size, ≥35× at 16×16
+    sp = {name: row["speedup"] for name, row in t1.items()}
+    for name, s in sp.items():
+        assert s >= 15.0, (name, s)
+    assert sp["16x16"] > sp["2x2"]
+    assert sp["16x16"] >= 35.0
+
+
+def test_naive_beats_xy_small_then_loses(t1):
+    # paper observation (iii)
+    assert t1["2x2"]["naive"] < t1["2x2"]["xy"]
+    assert t1["16x16"]["naive"] > t1["16x16"]["xy"]
+
+
+def test_fsync_event_sim_matches_analytic():
+    for shape in ((1, 2), (2, 2), (4, 4), (8, 8), (16, 16)):
+        tree = FractalTree(shape)
+        for pipelined in (False, True):
+            sim = FractalSyncSim(tree, pipelined=pipelined)
+            overhead, _ = sim.run()
+            assert overhead == tree.fsync_latency(pipelined=pipelined)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from([(2, 2), (4, 4), (8, 8)]), st.data())
+def test_fsync_skewed_arrivals(shape, data):
+    """Barrier correctness under skew: nobody wakes before the last request
+    could have reached the root; overhead ≤ analytic latency."""
+    tree = FractalTree(shape)
+    tiles = list(tree.tiles())
+    reqs = {t: data.draw(st.integers(0, 50)) for t in tiles}
+    sim = FractalSyncSim(tree)
+    overhead, finish = sim.run(requests=reqs)
+    last = max(reqs.values())
+    lat = tree.fsync_latency()
+    for t, f in finish.items():
+        assert f >= last + 2          # wake cannot precede slowest request
+    assert overhead == lat            # Ŝ is skew-invariant by definition
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([(1, 2), (2, 2), (4, 4)]), st.data())
+def test_amo_barrier_correctness_under_skew(shape, data):
+    """No tile may pass a (correct) barrier before every tile requested."""
+    rows, cols = shape
+    tiles = [(r, c) for r in range(rows) for c in range(cols)]
+    reqs = {t: data.draw(st.integers(0, 40)) for t in tiles}
+    sim = NaiveBarrier(rows, cols, DEFAULT_PARAMS)
+    sim.run(requests=dict(reqs))
+    last = max(reqs.values())
+    for t, f in sim.finish.items():
+        assert f > last
+    assert set(sim.finish) == set(tiles)
+
+
+def test_fsync_partial_level_domains():
+    tree = FractalTree((4, 4))
+    sim = FractalSyncSim(tree)
+    # sync only level 2 (groups of 4): latency = 2 + 2·2
+    overhead, _ = sim.run(level=2)
+    assert overhead == tree.fsync_latency(level=2) == 6
+
+
+def test_amo_schemes_scale_as_paper_claims():
+    """Naive superlinear, XY ~linear in k (scalability claim §4.1)."""
+    n4 = NaiveBarrier(4, 4, DEFAULT_PARAMS).run()
+    n8 = NaiveBarrier(8, 8, DEFAULT_PARAMS).run()
+    x4 = XYBarrier(4, 4, DEFAULT_PARAMS).run()
+    x8 = XYBarrier(8, 8, DEFAULT_PARAMS).run()
+    assert n8 / n4 > 3.0              # ≥ linear-in-tiles growth
+    assert x8 / x4 < 3.0              # sub-quadratic growth

@@ -1,0 +1,54 @@
+"""End-to-end system behaviour: the BSP train loop + serving stack.
+
+These are the integration tests the paper's workflow implies: a BSP-trained
+model whose synchronization runs on the FractalSync schedule must (a) learn,
+(b) reproduce exactly across schedule choices, (c) restart exactly.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _run(args, devices=None, timeout=1500):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, *args], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_bsp_schedules_agree_subprocess():
+    """Tier-B fractal vs Tier-A xla on identical data: same loss trajectory
+    (the explicit H-tree schedule computes the same mean gradient)."""
+    out = _run([str(ROOT / "tests" / "bsp_equivalence_check.py")])
+    assert "EQUIVALENT" in out
+
+
+@pytest.mark.slow
+def test_train_cli_runs_and_learns(tmp_path):
+    out = _run(["-m", "repro.launch.train", "--arch", "qwen2.5-3b-smoke",
+                "--steps", "8", "--batch", "4", "--seq", "64",
+                "--schedule", "fractal", "--devices", "4",
+                "--checkpoint-dir", str(tmp_path / "ckpt")])
+    first = last = None
+    for line in out.splitlines():
+        if line.startswith("loss:"):
+            parts = dict(p.split("=") for p in line.split()[1:])
+            first, last = float(parts["first"]), float(parts["last"])
+    assert first is not None and last < first
+
+
+@pytest.mark.slow
+def test_serve_cli_runs():
+    out = _run(["-m", "repro.launch.serve", "--arch", "gemma2-2b-smoke",
+                "--requests", "2", "--prompt-len", "8", "--gen", "4"])
+    assert "decode" in out

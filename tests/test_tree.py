@@ -1,0 +1,113 @@
+"""FractalTree invariants + Table-1 FractalSync latencies (exact)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree import FractalTree, neighbor_tree, square_tree
+
+# paper Table 1: mesh -> (FSync, FSync+P)
+FSYNC_TABLE = {
+    (1, 2): (4, 4),
+    (2, 2): (6, 6),
+    (4, 4): (10, 10),
+    (8, 8): (14, 18),
+    (16, 16): (18, 34),
+}
+
+
+@pytest.mark.parametrize("shape,expected", sorted(FSYNC_TABLE.items()))
+def test_fsync_latency_matches_paper(shape, expected):
+    tree = FractalTree(shape)
+    assert tree.fsync_latency() == expected[0]
+    assert tree.fsync_latency(pipelined=True) == expected[1]
+
+
+def test_latency_formula():
+    for k in (2, 4, 8, 16, 32, 64):
+        tree = square_tree(k)
+        assert tree.num_levels == 2 * int(math.log2(k))
+        assert tree.fsync_latency() == 2 + 2 * tree.num_levels
+
+
+def test_fs_module_count_matches_paper():
+    # paper §4.2: k²−1 FractalSync modules
+    for k in (2, 4, 8, 16):
+        assert square_tree(k).num_fs_modules == k * k - 1
+
+
+def test_neighbor_tree():
+    t = neighbor_tree()
+    assert t.num_tiles == 2 and t.num_levels == 1
+    assert t.fsync_latency() == 4
+
+
+def test_pipeline_regs_sequence_16():
+    t = square_tree(16)
+    regs = [t.level(l).pipeline_regs for l in range(1, 9)]
+    assert regs == [0, 0, 0, 0, 1, 1, 3, 3]
+    seps = [t.level(l).separation for l in range(1, 9)]
+    assert seps == [1, 1, 2, 2, 4, 4, 8, 8]
+
+
+def test_multi_pod_tree_pod_joins_last():
+    t = FractalTree((2, 16, 16))
+    assert t.num_levels == 9
+    assert t.levels[-1].axis == 0     # pod axis is the root level
+    # innermost axis merges first
+    assert t.levels[0].axis == 2
+
+
+shapes_st = st.sampled_from([(2, 2), (4, 4), (8, 8), (16, 16), (1, 2),
+                             (2, 4), (4, 8), (2, 16, 16)])
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes_st, st.integers(0, 10), st.data())
+def test_partner_involution_and_domains(shape, level_raw, data):
+    tree = FractalTree(shape)
+    level = 1 + level_raw % tree.num_levels
+    tiles = list(tree.tiles())
+    tile = data.draw(st.sampled_from(tiles))
+    p = tree.partner(tile, level)
+    assert p != tile
+    assert tree.partner(p, level) == tile            # involution
+    # partner is inside the same level-domain, outside the (level-1)-domain
+    assert tree.domain_key(p, level) == tree.domain_key(tile, level)
+    assert tree.domain_key(p, level - 1) != tree.domain_key(tile, level - 1) \
+        or level == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(shapes_st, st.integers(0, 10))
+def test_domains_partition(shape, level_raw):
+    tree = FractalTree(shape)
+    level = level_raw % (tree.num_levels + 1)
+    domains = tree.domains(level)
+    seen = set()
+    for d in domains:
+        assert len(d) == tree.domain_size(level)
+        for t in d:
+            assert t not in seen
+            seen.add(t)
+    assert len(seen) == tree.num_tiles
+
+
+@settings(max_examples=20, deadline=None)
+@given(shapes_st)
+def test_latency_monotonic_in_level(shape):
+    tree = FractalTree(shape)
+    lat = [tree.fsync_latency(level) for level in range(1, tree.num_levels + 1)]
+    assert all(b > a for a, b in zip(lat, lat[1:]))
+    latp = [tree.fsync_latency(level, pipelined=True)
+            for level in range(1, tree.num_levels + 1)]
+    assert all(b >= a for a, b in zip(latp, latp[1:]))
+    assert all(p >= n for n, p in zip(lat, latp))
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        FractalTree((3, 3))
+    with pytest.raises(ValueError):
+        FractalTree((1, 1))
