@@ -5,6 +5,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows.
   area       paper §4.2: tile/system area, NoC + FS shares
   scaling    beyond-paper: schedule scaling 2×2 → 64×64 (+ TPU projection)
   schedules  measured wall-time of the JAX collective schedules (16 host dev)
+  schedule_matrix  Schedule-IR autotuning sweep: cost ranking × NoC replay ×
+             measured lowering; asserts the butterfly↔ring payload crossover
   probes     XLA cost_analysis while-loop probe (motivates hlo_analysis)
   roofline   per-(arch×shape×mesh) roofline table from results/dryrun/*.json
 
@@ -22,7 +24,8 @@ if "XLA_FLAGS" not in os.environ or "device_count" not in os.environ.get(
     os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=16 "
                                + os.environ.get("XLA_FLAGS", ""))
 
-BENCHES = ("table1", "area", "scaling", "schedules", "probes", "roofline")
+BENCHES = ("table1", "area", "scaling", "schedules", "schedule_matrix",
+           "probes", "roofline")
 
 
 def main(argv=None) -> None:

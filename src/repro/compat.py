@@ -1,0 +1,137 @@
+"""Version compatibility shims for the jax API surface this repo targets.
+
+The codebase is written against the jax 0.8-era API (``jax.shard_map`` with
+``axis_names``/``check_vma``, ``jax.sharding.AxisType``, Pallas
+``CompilerParams``).  CI containers — and the baked-in toolchain here — carry
+jax 0.4.x, where the same capabilities live under different names:
+
+  =====================  ==========================================
+  modern (0.6+)          0.4.x fallback
+  =====================  ==========================================
+  jax.shard_map          jax.experimental.shard_map.shard_map
+    axis_names=manual      auto = mesh axes − manual
+    check_vma=...          check_rep=...
+  jax.sharding.AxisType  absent (meshes are implicitly Auto)
+  jax.make_mesh(...,     jax.make_mesh without the kwarg
+    axis_types=...)
+  pltpu.CompilerParams   pltpu.TPUCompilerParams
+  =====================  ==========================================
+
+Import from here instead of branching at each call site.  Everything is
+resolved once at import time; no jax device state is touched.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Optional
+
+import jax
+
+# --------------------------------------------------------------------- AxisType
+
+try:  # jax >= 0.5: explicit/auto/manual mesh axis types
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    HAS_AXIS_TYPE = True
+except ImportError:  # jax 0.4.x: all axes behave as Auto
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+    HAS_AXIS_TYPE = False
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates jaxes without ``axis_types``."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPE:
+        if axis_types is None:
+            axis_types = (AxisType.Auto,) * len(tuple(axis_names))
+        try:
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                                 axis_types=tuple(axis_types), **kwargs)
+        except TypeError:
+            pass  # make_mesh predates the kwarg even though AxisType exists
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """``jax.sharding.AbstractMesh`` across the 0.4.x→0.6 signature change
+    (legacy wants one ``((name, size), ...)`` tuple, modern wants two)."""
+    axis_shapes = tuple(axis_shapes)
+    axis_names = tuple(axis_names)
+    try:
+        return jax.sharding.AbstractMesh(axis_shapes, axis_names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+# -------------------------------------------------------------------- shard_map
+
+HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")
+if not HAS_JAX_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+
+def shard_map(fn, mesh, in_specs, out_specs, *, axis_names=None,
+              check_vma: bool = False):
+    """Modern-signature shard_map on any supported jax.
+
+    ``axis_names`` is the set of mesh axes handled *manually* (collectives
+    visible inside ``fn``); every other mesh axis stays auto (GSPMD).  On
+    0.4.x this translates to the legacy ``auto=`` complement-set parameter.
+    """
+    if axis_names is None:
+        axis_names = frozenset(mesh.axis_names)
+    axis_names = frozenset(axis_names)
+    if HAS_JAX_SHARD_MAP:
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma,
+                             axis_names=axis_names)
+    auto = frozenset(mesh.axis_names) - axis_names
+    return _legacy_shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma,
+                             auto=auto)
+
+
+# ----------------------------------------------------------------------- Pallas
+
+def pallas_tpu_compiler_params(**kwargs) -> Optional[object]:
+    """``pltpu.CompilerParams`` / legacy ``TPUCompilerParams``, or None when
+    the installed Pallas exposes neither (caller should drop the argument)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except Exception:  # pragma: no cover - pallas entirely absent
+        return None
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        return None
+    try:
+        return cls(**kwargs)
+    except TypeError:  # pragma: no cover - kwarg drift between versions
+        return None
+
+
+def pallas_supported() -> bool:
+    """True when the installed Pallas exposes the API the kernels use.
+
+    Checked by ``kernels/*/ops.py`` to decide between the Pallas kernel and
+    the pure-jnp reference implementation (tests skip-or-pass either way).
+    """
+    try:
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+    except Exception:
+        return False
+    return all((
+        hasattr(pl, "pallas_call"),
+        hasattr(pl, "BlockSpec"),
+        hasattr(pl, "when"),
+        hasattr(pltpu, "VMEM"),
+        pallas_tpu_compiler_params() is not None
+        or hasattr(pltpu, "CompilerParams")
+        or hasattr(pltpu, "TPUCompilerParams"),
+    ))

@@ -1,0 +1,124 @@
+"""Runtime schedule autotuner: pick the best schedule per workload.
+
+The ROADMAP north-star is "add schedules and pick the fastest one per
+workload"; with every schedule now a Schedule IR program, selection is a
+query, not a code path:
+
+  1. **Cost-model ranking** — price every registered IR builder for the
+     concrete ``(mesh shape, payload bytes, link parameters)`` with
+     ``cost_model.program_cost`` (mesh-contention mode by default: that is
+     what separates the latency-optimal butterfly from the
+     bandwidth-optimal ring);
+  2. **Optional measured refinement** — time the top-k candidates with a
+     caller-supplied ``measure(schedule) → seconds`` (e.g. the jitted
+     lowering on real devices; see ``benchmarks/schedule_matrix.py``) and
+     let measurement override the model where they disagree.
+
+Wired through ``BSPConfig(schedule="auto")`` → ``bsp.sync_gradients`` /
+``runtime.trainer.make_bsp_train_step``: the trainer resolves "auto" once
+at build time from the flat gradient size and logs the choice.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from . import cost_model, schedule_ir
+from .cost_model import LinkParams, TPU_V5E_ICI
+
+
+@dataclass(frozen=True)
+class TuneResult:
+    """Outcome of one autotuning query."""
+
+    schedule: str                              # the winner
+    shape: Tuple[int, ...]
+    payload_bytes: float
+    ranking: Tuple[Tuple[str, float], ...]     # (schedule, predicted s) asc
+    measured: Tuple[Tuple[str, float], ...] = ()   # (schedule, measured s)
+
+    @property
+    def predicted_s(self) -> float:
+        return dict(self.ranking)[self.schedule]
+
+
+def _candidates(shape: Sequence[int],
+                schedules: Optional[Sequence[str]]) -> List[str]:
+    names = list(schedules) if schedules else list(schedule_ir.SCHEDULES)
+    world = math.prod(shape)
+    pow2 = world >= 1 and (world & (world - 1)) == 0
+    if not pow2:
+        # tree-structured schedules need a power-of-two world
+        names = [n for n in names if n in ("ring", "xy", "naive")]
+    if not names:
+        raise ValueError(
+            f"no schedule among {schedules} can run on shape {tuple(shape)}")
+    return names
+
+
+def rank_schedules(shape: Sequence[int], payload_bytes: float,
+                   link: LinkParams = TPU_V5E_ICI,
+                   outer_link: Optional[LinkParams] = None,
+                   schedules: Optional[Sequence[str]] = None,
+                   mesh_contention: bool = True
+                   ) -> List[Tuple[str, float]]:
+    """All candidate schedules priced for this workload, cheapest first."""
+    shape = tuple(shape)
+    names = _candidates(shape, schedules)
+    if math.prod(shape) == 1:
+        # nothing to communicate: every schedule is a no-op, don't build IR
+        return [(names[0], 0.0)]
+    out = []
+    for name in names:
+        prog = schedule_ir.build_program(name, shape)
+        cost = cost_model.program_cost(prog, payload_bytes, link,
+                                       outer_link=outer_link,
+                                       mesh_contention=mesh_contention)
+        out.append((name, cost))
+    out.sort(key=lambda kv: kv[1])
+    return out
+
+
+def pick_schedule(shape: Sequence[int], payload_bytes: float,
+                  link: LinkParams = TPU_V5E_ICI,
+                  outer_link: Optional[LinkParams] = None,
+                  schedules: Optional[Sequence[str]] = None,
+                  mesh_contention: bool = True) -> str:
+    """Cost-model-optimal schedule name for ``(shape, payload, link)``."""
+    return rank_schedules(shape, payload_bytes, link, outer_link, schedules,
+                          mesh_contention)[0][0]
+
+
+def autotune(shape: Sequence[int], payload_bytes: float,
+             link: LinkParams = TPU_V5E_ICI,
+             outer_link: Optional[LinkParams] = None,
+             schedules: Optional[Sequence[str]] = None,
+             measure: Optional[Callable[[str], float]] = None,
+             measure_top_k: int = 3,
+             mesh_contention: bool = True) -> TuneResult:
+    """Rank by cost model; optionally refine the top-k with measurements.
+
+    ``measure(schedule)`` returns observed seconds (or raises / returns
+    ``inf`` for schedules that fail to run — they are skipped).
+    """
+    shape = tuple(shape)
+    ranking = tuple(rank_schedules(shape, payload_bytes, link, outer_link,
+                                   schedules, mesh_contention))
+    winner = ranking[0][0]
+    measured: List[Tuple[str, float]] = []
+    if measure is not None:
+        for name, _cost in ranking[:measure_top_k]:
+            try:
+                t = float(measure(name))
+            except Exception:
+                continue
+            if math.isfinite(t):
+                measured.append((name, t))
+        if measured:
+            measured.sort(key=lambda kv: kv[1])
+            winner = measured[0][0]
+    return TuneResult(schedule=winner, shape=shape,
+                      payload_bytes=payload_bytes, ranking=ranking,
+                      measured=tuple(measured))

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
+from repro import compat
+
 from . import collectives
 from .barrier import barrier_tie
 from .collectives import fractal_barrier
@@ -40,7 +42,9 @@ class BSPConfig:
 
     sync_axes   : mesh axes forming the synchronization tree, outermost first
                   (e.g. ("pod","data")); their product is the BSP world.
-    schedule    : gradient all-reduce schedule (see collectives.SCHEDULES).
+    schedule    : gradient all-reduce schedule (see collectives.SCHEDULES),
+                  or "auto" — the cost-model autotuner picks per (mesh,
+                  payload) at trace/build time (core.autotune).
     compression : payload codec for the fractal schedule ("none"|"bf16"|"int8").
     fsync_level : barrier scope (None = root = whole world); lower levels
                   synchronize only a subtree (paper §3.2 domains).
@@ -55,7 +59,8 @@ class BSPConfig:
     pad_align: int = 128
 
     def __post_init__(self):
-        if self.schedule not in collectives.SCHEDULES:
+        if self.schedule != "auto" and \
+                self.schedule not in collectives.SCHEDULES:
             raise ValueError(f"unknown schedule {self.schedule!r}")
 
 
@@ -81,6 +86,19 @@ def make_codec(name: str):
     raise ValueError(f"unknown compression {name!r}")
 
 
+def resolve_schedule(cfg: BSPConfig, sizes: Sequence[int],
+                     payload_bytes: float) -> str:
+    """Concrete schedule name for this config: "auto" → autotuner pick.
+
+    Everything involved is host-static (mesh shape, padded flat length), so
+    this is safe to call at trace/build time.
+    """
+    if cfg.schedule != "auto":
+        return cfg.schedule
+    from .autotune import pick_schedule
+    return pick_schedule(tuple(sizes), payload_bytes)
+
+
 def sync_gradients(grads, cfg: BSPConfig, sizes: Sequence[int],
                    mean: bool = True):
     """All-reduce a gradient pytree with the configured schedule.
@@ -99,11 +117,12 @@ def sync_gradients(grads, cfg: BSPConfig, sizes: Sequence[int],
             [flat, jnp.zeros((padded - n,), flat.dtype)])
 
     codec = make_codec(cfg.compression)
-    if cfg.schedule == "fractal":
+    schedule = resolve_schedule(cfg, sizes, padded * flat.dtype.itemsize)
+    if schedule == "fractal":
         flat = collectives.fractal_all_reduce(flat, cfg.sync_axes, sizes,
                                               codec=codec)
     else:
-        flat = collectives.all_reduce(flat, cfg.schedule, cfg.sync_axes, sizes)
+        flat = collectives.all_reduce(flat, schedule, cfg.sync_axes, sizes)
     if mean:
         flat = flat / world
     return unravel(flat[:n])
@@ -138,6 +157,6 @@ def bsp_shard_map(fn: Callable, mesh: jax.sharding.Mesh,
     every other mesh axis (e.g. "model") stays auto (GSPMD).
     """
     del auto_axes  # everything not in sync_axes is auto by construction
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False,
-                         axis_names=frozenset(sync_axes))
+    return compat.shard_map(fn, mesh, in_specs, out_specs,
+                            check_vma=False,
+                            axis_names=frozenset(sync_axes))

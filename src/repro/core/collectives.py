@@ -43,7 +43,10 @@ from typing import Callable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
+
+from . import schedule_ir
 
 AxisNames = Tuple[str, ...]
 
@@ -298,47 +301,81 @@ def hierarchical_all_reduce(x: jax.Array, inner_axes: AxisNames,
 
 
 # ---------------------------------------------------------------------------
+# Schedule IR lowering: any all-reduce Program → shard_map + ppermute
+# ---------------------------------------------------------------------------
+
+
+def _step_tables(prog: schedule_ir.Program, step: schedule_ir.Step):
+    """Host-side constant tables for one IR step (hashable for jit reuse):
+    per-rank send/recv chunk ids, destination mask, reduce-vs-copy mask."""
+    world, k = prog.world, step.max_chunks_moved
+    S = np.zeros((world, k), np.int32)
+    R = np.zeros((world, k), np.int32)
+    is_dst = np.zeros((world,), bool)
+    red = np.zeros((world,), bool)
+    perm = []
+    for t in step.transfers:
+        S[t.src] = t.chunks
+        R[t.dst] = t.chunks
+        is_dst[t.dst] = True
+        red[t.dst] = t.reduce
+        perm.append((t.src, t.dst))
+    return perm, S, R, is_dst, red
+
+
+def ir_all_reduce(x: jax.Array, prog: schedule_ir.Program,
+                  axis_names: AxisNames) -> jax.Array:
+    """Execute an all-reduce IR Program inside ``shard_map``.
+
+    The generic lowering that subsumes the hand-rolled per-schedule loops:
+    the payload is viewed as ``[n_chunks, chunk]``; each IR step becomes one
+    ``lax.ppermute`` (the IR validator guarantees every step is a partial
+    permutation with uniform message shapes) bracketed by chunk gathers and
+    reduce-or-overwrite scatters driven by per-rank constant tables.
+    """
+    if prog.kind != schedule_ir.ALL_REDUCE:
+        raise ValueError(f"cannot lower {prog.kind!r} program {prog.name!r}")
+    n_chunks = prog.n_chunks
+    if prog.world == 1:
+        return x
+    if x.shape[0] % n_chunks:
+        raise ValueError(f"leading dim {x.shape[0]} not divisible by "
+                         f"{n_chunks} chunks of {prog.name!r}")
+    idx = flat_index(axis_names)
+    buf = x.reshape(n_chunks, x.shape[0] // n_chunks, *x.shape[1:])
+    for step in prog.steps:
+        if not step.transfers:
+            continue
+        perm, S, R, is_dst, red = _step_tables(prog, step)
+        send = jnp.take(buf, jnp.asarray(S)[idx], axis=0)
+        recv = lax.ppermute(send, axis_names, perm)
+        rids = jnp.asarray(R)[idx]
+        merged = jnp.where(jnp.asarray(red)[idx],
+                           buf.at[rids].add(recv),
+                           buf.at[rids].set(recv))
+        buf = jnp.where(jnp.asarray(is_dst)[idx], merged, buf)
+    return buf.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
 # schedule registry + flat-tensor entry point (used by BSP gradient sync)
 # ---------------------------------------------------------------------------
 
-SCHEDULES = ("fractal", "ring", "xy", "naive", "hierarchical", "xla")
+SCHEDULES = schedule_ir.SCHEDULES + ("xla",)
 
 
 def all_reduce(x: jax.Array, schedule: str, axis_names: AxisNames,
                sizes: Sequence[int]) -> jax.Array:
     """Dispatch an all-reduce over the flattened ``axis_names`` world.
 
-    ``x`` must have a leading dim divisible by the world size for the
-    scatter-based schedules (BSP gradient sync pads to this).
+    Every software schedule routes through the Schedule IR (one builder per
+    schedule, one generic lowering); ``"xla"`` short-circuits to
+    ``lax.psum``.  ``x`` must have a leading dim divisible by the world size
+    (BSP gradient sync pads to this).  The pre-IR hand-rolled lowerings
+    above remain exported for the reduce-scatter/all-gather split that the
+    ZeRO-1 trainer uses and as cross-checks in the test-suite.
     """
     if schedule == "xla":
         return lax.psum(x, axis_names)
-    if schedule == "fractal":
-        return fractal_all_reduce(x, axis_names, sizes)
-    if schedule == "naive":
-        return naive_all_reduce(x, axis_names, sizes)
-    if schedule == "ring":
-        if len(axis_names) == 1:
-            return ring_all_reduce(x, axis_names[0], sizes[0])
-        # flat ring over multiple axes: treat as nested rings innermost-first
-        out = x
-        for a, s in zip(reversed(axis_names), reversed(sizes)):
-            out = ring_all_reduce(out, a, s)
-        return out
-    if schedule == "xy":
-        if len(axis_names) == 1:
-            # split a single axis into two virtual dims is not possible with
-            # named collectives; degrade to ring (documented in DESIGN.md)
-            return ring_all_reduce(x, axis_names[0], sizes[0])
-        ax_inner, ax_outer = axis_names[-1], axis_names[0]
-        x = ring_all_reduce(x, ax_inner, sizes[-1])
-        for a, s in zip(axis_names[:-1], sizes[:-1]):
-            x = ring_all_reduce(x, a, s)
-        return x
-    if schedule == "hierarchical":
-        if len(axis_names) < 2:
-            return fractal_all_reduce(x, axis_names, sizes)
-        # innermost axes = intra-pod (fast), outermost = inter-pod (slow)
-        return hierarchical_all_reduce(x, axis_names[1:], sizes[1:],
-                                       axis_names[:1], sizes[:1])
-    raise ValueError(f"unknown schedule {schedule!r}; one of {SCHEDULES}")
+    prog = schedule_ir.build_program(schedule, tuple(sizes))
+    return ir_all_reduce(x, prog, axis_names)

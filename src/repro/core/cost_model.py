@@ -19,6 +19,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from functools import lru_cache
+from typing import Optional, Tuple
+
+from . import schedule_ir
 
 
 @dataclass(frozen=True)
@@ -92,6 +96,14 @@ def hierarchical_all_reduce(n_inner: int, n_outer: int, vol_B: float,
     return rs + mid + ag
 
 
+def tree_all_reduce(n: int, vol_B: float, link: LinkParams) -> float:
+    """Two-phase tree reduce-broadcast: 2·log n steps each moving the full
+    payload — latency-optimal like the butterfly, but O(V·log n) bytes."""
+    if n <= 1:
+        return 0.0
+    return 2 * math.log2(n) * (link.alpha_s + vol_B / link.bw_Bps)
+
+
 def barrier_cost(n: int, link: LinkParams, schedule: str = "fractal") -> float:
     """Pure-control barrier (payload→0): only the α terms survive. This is the
     regime of the paper, where the H-tree's 2·log2(N) steps win."""
@@ -115,6 +127,8 @@ def schedule_cost(schedule: str, n: int, vol_B: float, link: LinkParams,
         return ring_all_reduce(n, vol_B, link)
     if schedule == "naive":
         return naive_all_reduce(n, vol_B, link)
+    if schedule == "tree":
+        return tree_all_reduce(n, vol_B, link)
     if schedule == "xy":
         kx, ky = mesh_xy or _square(n)
         return xy_all_reduce(kx, ky, vol_B, link)
@@ -126,3 +140,95 @@ def _square(n: int) -> tuple[int, int]:
     if k * k != n:
         raise ValueError(f"{n} is not square; pass mesh_xy explicitly")
     return k, k
+
+
+# ---------------------------------------------------------------------------
+# Schedule IR backend: price any program directly from its step structure
+# ---------------------------------------------------------------------------
+#
+# Plain α-β mode (mesh_contention=False):
+#
+#     cost = Σ_steps [ α + max_edge_fraction(step) · V / bw ]
+#
+# which reproduces the closed forms above *exactly* for every IR builder
+# (the tests cross-check this).  Mesh mode (mesh_contention=True)
+# additionally routes every transfer XY on the 2D mesh and charges
+#
+#     cost_step = hops_max · α + max_link_load · V / bw
+#
+# where max_link_load is the largest payload fraction any single directed
+# link carries.  This is what separates the butterfly from the ring: ring
+# neighbors are 1 hop with load V/N per link, while butterfly partners at
+# sub-step b sit 2^⌊b/2⌋ hops apart and 2^⌊b/2⌋ exchanges share the middle
+# links — the latency-vs-bandwidth crossover the autotuner exploits.
+
+
+def _route_links(rows: int, cols: int, src: int, dst: int):
+    """Directed links of the XY route between flat ranks (mirrors NoC)."""
+    r, c = divmod(src, cols)
+    dr, dc = divmod(dst, cols)
+    links = []
+    while c != dc:
+        nc = c + (1 if dc > c else -1)
+        links.append(((r, c), (r, nc)))
+        c = nc
+    while r != dr:
+        nr = r + (1 if dr > r else -1)
+        links.append(((r, c), (nr, c)))
+        r = nr
+    return links
+
+
+@lru_cache(maxsize=512)
+def _step_geometry(prog: schedule_ir.Program) -> Tuple[Tuple[int, float], ...]:
+    """Per step: (max hop distance, max per-directed-link payload load in V
+    units), from XY-routing every transfer on the program's 2D projection."""
+    rows, cols = schedule_ir.as_2d(prog.shape)
+    out = []
+    for step in prog.steps:
+        hops_max = 1
+        load: dict = {}
+        for t in step.transfers:
+            frac = prog.frac(t)
+            links = _route_links(rows, cols, t.src, t.dst)
+            hops_max = max(hops_max, len(links))
+            for l in links:
+                load[l] = load.get(l, 0.0) + frac
+        out.append((hops_max, max(load.values(), default=0.0)))
+    return tuple(out)
+
+
+def program_cost(prog: schedule_ir.Program, vol_B: float,
+                 link: LinkParams, outer_link: Optional[LinkParams] = None,
+                 mesh_contention: bool = False) -> float:
+    """Predicted wall time of an IR program moving ``vol_B`` bytes/rank.
+
+    Steps tagged ``tier="outer"`` (the hierarchical schedule's inter-pod
+    middle) are priced on ``outer_link`` with hop distance 1 — pod-level
+    links are point-to-point, not mesh-routed.  Without a distinct
+    ``outer_link`` there IS no separate pod fabric: outer steps then ride
+    the same mesh as everything else and pay hops/contention like any
+    other step (otherwise the hierarchical schedule would beat the
+    butterfly on single-tier meshes by modeling fiat).
+    """
+    geometry = _step_geometry(prog) if mesh_contention else None
+    total = 0.0
+    for i, step in enumerate(prog.steps):
+        if not step.transfers:
+            continue
+        outer = step.tier == schedule_ir.TIER_OUTER and outer_link is not None
+        lp = outer_link if outer else link
+        frac = step.max_chunks_moved / prog.n_chunks
+        if geometry is not None and not outer:
+            hops, link_load = geometry[i]
+            total += hops * lp.alpha_s + max(frac, link_load) * vol_B / lp.bw_Bps
+        else:
+            total += lp.alpha_s + frac * vol_B / lp.bw_Bps
+    return total
+
+
+def program_barrier_cost(prog: schedule_ir.Program, link: LinkParams,
+                         outer_link: Optional[LinkParams] = None,
+                         mesh_contention: bool = False) -> float:
+    """Pure-control regime (payload → 0): only the α structure survives."""
+    return program_cost(prog, 0.0, link, outer_link, mesh_contention)

@@ -33,6 +33,7 @@ from collections import defaultdict
 from dataclasses import dataclass, replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from . import schedule_ir
 from .tree import FractalTree
 
 Coord = Tuple[int, int]
@@ -136,12 +137,19 @@ class NoC:
         return links
 
     def send(self, t: int, src: Coord, dst: Coord,
-             on_deliver: Callable[[int], None]) -> None:
-        """Inject a 1-flit message at time t; call on_deliver at arrival."""
+             on_deliver: Callable[[int], None], flits: int = 1) -> None:
+        """Inject a message at time t; call on_deliver at (tail) arrival.
+
+        ``flits > 1`` models payload-carrying messages: each traversed link
+        is held for ``flits · link_occupancy`` cycles and the tail trails
+        the head by the serialization delay (wormhole-ish store-and-forward,
+        used by ``schedule_on_noc`` for all-reduce payloads)."""
         assert src != dst, "local operations must not use the NoC"
         path = self._path(src, dst)
         self.total_msgs += 1
         self.total_hops += len(path) - 2
+        occupy = self.p.link_occupancy * max(1, flits)
+        serial = self.p.link_occupancy * (max(1, flits) - 1)
 
         def advance(i: int, t: int) -> None:
             if i == len(path):
@@ -152,8 +160,8 @@ class NoC:
             if free > t:
                 self.sim.at(free, lambda tt: advance(i, tt))
                 return
-            self.link_free[key] = t + self.p.link_occupancy
-            self.sim.at(t + lat, lambda tt: advance(i + 1, tt))
+            self.link_free[key] = t + occupy
+            self.sim.at(t + lat + serial, lambda tt: advance(i + 1, tt))
 
         advance(0, t)
 
@@ -234,121 +242,177 @@ class _AMOMachine:
         return max(self.finish.values()) - max(requests.values())
 
 
-class NaiveBarrier(_AMOMachine):
-    """Single master tile accepts requests and dispatches responses (§4.1).
+class HierarchicalAMOBarrier(_AMOMachine):
+    """Generic AMO barrier executor over any gather-tree barrier Program.
 
-    fetch-add a counter at the master; the arriver that reads N-1 writes the
-    release flag; all others spin-poll the flag over the NoC.
+    The IR supplies the *topology* — its reduce steps, bottom-up, define the
+    levels of a synchronization hierarchy (group members per master); this
+    class supplies the *protocol* the paper's software baselines use:
+
+      * lower levels: members fetch-add the group counter at their master
+        and spin-poll the group flag over the NoC; the master local-polls
+        its counter and escalates to the next level when the group is in;
+      * top level: all participants (incl. the master) fetch-add at the top
+        master; the last arriver writes the release flag, everyone else
+        spin-polls it; release then cascades down through the group flags.
+
+    ``NaiveBarrier`` (star topology), ``XYBarrier`` (row/column 2-level
+    tree) and ``tree_amo_barrier`` (full H-tree, SynCron-style) are just IR
+    instances of this executor — one protocol, many topologies.
     """
 
-    def run(self, requests: Optional[Dict[Coord, int]] = None,
-            master: Coord = (0, 0)) -> int:
-        tiles = self.tiles()
-        n = len(tiles)
-        requests = requests or {t: 0 for t in tiles}
-        p = self.p
+    def __init__(self, prog: schedule_ir.Program,
+                 p: SimParams = DEFAULT_PARAMS):
+        rows, cols = schedule_ir.as_2d(prog.shape)
+        super().__init__(rows, cols, p)
+        self.prog = prog
+        # bottom-up levels from the IR's reduce (gather) steps
+        self.levels: List[Dict[Coord, List[Coord]]] = []
+        for step in prog.steps:
+            if not step.transfers or not all(t.reduce for t in step.transfers):
+                continue  # broadcast mirror steps: release is protocol-implied
+            groups: Dict[Coord, List[Coord]] = defaultdict(list)
+            for t in step.transfers:
+                groups[self._coord(t.dst)].append(self._coord(t.src))
+            self.levels.append(dict(groups))
+        if not self.levels:
+            raise ValueError(f"{prog.name!r} has no gather steps")
+        self._member_master: List[Dict[Coord, Coord]] = [
+            {m: master for master, ms in lvl.items() for m in ms}
+            for lvl in self.levels
+        ]
 
-        def poll(tile: Coord, t: int) -> None:
-            def on_flag(tt: int, flag: int) -> None:
-                if flag:
-                    self.finish[tile] = tt + p.sw_post
-                else:
-                    self.sim.at(tt + p.sw_poll,
-                                lambda t2: poll(tile, t2))
-            self.amo_op(t, tile, master, "read", "flag", 0, on_flag)
+    def _coord(self, rank: int) -> Coord:
+        return divmod(rank, self.cols)
 
-        def start(tile: Coord, t: int) -> None:
-            def on_count(tt: int, old: int) -> None:
-                if old == n - 1:  # last arriver: release everyone
-                    def on_release(td: int, _old: int) -> None:
-                        self.finish[tile] = td + p.sw_post
-                    self.amo_op(tt + p.sw_between, tile, master,
-                                "write", "flag", 1, on_release)
-                else:
-                    self.sim.at(tt + p.sw_between,
-                                lambda t2: poll(tile, t2))
-            self.amo_op(t + p.sw_pre, tile, master, "fetch_add", "count", 1,
-                        on_count)
-
-        for tile, r in requests.items():
-            self.sim.at(r, lambda t, tile=tile: start(tile, t))
-        self.sim.run()
-        return self.overhead(requests)
-
-
-class XYBarrier(_AMOMachine):
-    """Two 1D phases: rows barrier on row-masters (col 0), then row-masters
-    barrier on the global master (0,0); release cascades back (§4.1)."""
+    def _entry_level(self, tile: Coord) -> Optional[int]:
+        for lvl, groups in enumerate(self.levels):
+            if tile in groups or tile in self._member_master[lvl]:
+                return lvl
+        return None
 
     def run(self, requests: Optional[Dict[Coord, int]] = None) -> int:
         tiles = self.tiles()
         requests = requests or {t: 0 for t in tiles}
         p = self.p
-        k_cols = self.cols
-        k_rows = self.rows
-        gmaster = (0, 0)
+        top = len(self.levels) - 1
 
-        def poll(tile: Coord, at_tile: Coord, addr: str,
-                 on_set: Callable[[int], None], t: int) -> None:
+        def addr(kind: str, lvl: int) -> str:
+            return f"{kind}{lvl}"
+
+        def poll_remote(x: Coord, at: Coord, a: str,
+                        on_set: Callable[[int], None], t: int) -> None:
             def on_rd(tt: int, v: int) -> None:
                 if v:
                     on_set(tt)
                 else:
                     self.sim.at(tt + p.sw_poll,
-                                lambda t2: poll(tile, at_tile, addr, on_set, t2))
-            self.amo_op(t, tile, at_tile, "read", addr, 0, on_rd)
+                                lambda t2: poll_remote(x, at, a, on_set, t2))
+            self.amo_op(t, x, at, "read", a, 0, on_rd)
 
-        # ---- phase 2: row masters barrier at global master -----------------
-        def phase2(rm: Coord, t: int) -> None:
-            def on_count(tt: int, old: int) -> None:
-                if old == k_rows - 1:
-                    def on_release(td: int, _o: int) -> None:
-                        release_row(rm, td)
-                    self.amo_op(tt + p.sw_between, rm, gmaster,
-                                "write", "gflag", 1, on_release)
-                else:
-                    self.sim.at(tt + p.sw_between,
-                                lambda t2: poll(rm, gmaster, "gflag",
-                                                lambda td: release_row(rm, td),
-                                                t2))
-            self.amo_op(t + p.sw_between, rm, gmaster, "fetch_add", "gcount",
-                        1, on_count)
+        def descend(x: Coord, lvl: int, t: int) -> None:
+            """x released at level lvl+1: publish its own group flags down."""
+            if lvl < 0 or x not in self.levels[lvl]:
+                self.finish[x] = t + p.sw_post
+                return
 
-        # ---- release: row master writes its local row flag ------------------
-        def release_row(rm: Coord, t: int) -> None:
             def on_wr(tt: int, _o: int) -> None:
-                self.finish[rm] = tt + p.sw_post
-            self.amo_op(t + p.sw_between, rm, rm, "write", "rflag", 1, on_wr)
+                descend(x, lvl - 1, tt)
+            self.amo_op(t + p.sw_between, x, x, "write", addr("flag", lvl),
+                        1, on_wr)
 
-        # ---- phase 1: tiles barrier at their row master ----------------------
-        def start(tile: Coord, t: int) -> None:
-            r, c = tile
-            rm = (r, 0)
-            if tile == rm:
-                # Row master spin-polls its LOCAL row counter until the other
-                # k-1 row tiles have arrived, then enters phase 2.
-                def wait_row(tt: int) -> None:
+        def arrive(x: Coord, lvl: int, t: int) -> None:
+            pre = p.sw_pre if lvl == 0 else p.sw_between
+            if lvl == top:
+                (master, members), = self.levels[lvl].items()
+                target = len(members) + 1  # master fetch-adds too
+
+                def on_count(tt: int, old: int) -> None:
+                    if old == target - 1:    # last arriver: release everyone
+                        def on_release(td: int, _o: int) -> None:
+                            descend(x, lvl - 1, td)
+                        self.amo_op(tt + p.sw_between, x, master, "write",
+                                    addr("flag", lvl), 1, on_release)
+                    else:
+                        self.sim.at(tt + p.sw_between,
+                                    lambda t2: poll_remote(
+                                        x, master, addr("flag", lvl),
+                                        lambda td: descend(x, lvl - 1, td),
+                                        t2))
+                self.amo_op(t + pre, x, master, "fetch_add",
+                            addr("cnt", lvl), 1, on_count)
+            elif x in self.levels[lvl]:
+                # group master: spin-poll the LOCAL counter, then escalate
+                members = self.levels[lvl][x]
+
+                def wait_group(tt: int) -> None:
                     def on_rd(td: int, v: int) -> None:
-                        if v == k_cols - 1:
-                            phase2(rm, td)
+                        if v == len(members):
+                            arrive(x, lvl + 1, td)
                         else:
-                            self.sim.at(td + p.sw_poll, wait_row)
-                    self.amo_op(tt, rm, rm, "read", "rcount", 0, on_rd)
-                self.sim.at(t + p.sw_pre, wait_row)
+                            self.sim.at(td + p.sw_poll, wait_group)
+                    self.amo_op(tt, x, x, "read", addr("cnt", lvl), 0, on_rd)
+                self.sim.at(t + pre, wait_group)
             else:
+                # member: fetch-add at the master, then poll the group flag
+                master = self._member_master[lvl][x]
+
                 def on_count(tt: int, _old: int) -> None:
                     self.sim.at(tt + p.sw_between,
-                                lambda t2: poll(tile, rm, "rflag",
-                                                lambda td: self.finish.__setitem__(
-                                                    tile, td + p.sw_post),
-                                                t2))
-                self.amo_op(t + p.sw_pre, tile, rm, "fetch_add", "rcount", 1,
-                            on_count)
+                                lambda t2: poll_remote(
+                                    x, master, addr("flag", lvl),
+                                    lambda td: descend(x, lvl - 1, td), t2))
+                self.amo_op(t + pre, x, master, "fetch_add",
+                            addr("cnt", lvl), 1, on_count)
 
         for tile, r in requests.items():
-            self.sim.at(r, lambda t, tile=tile: start(tile, t))
+            lvl = self._entry_level(tile)
+            if lvl is None:     # world of 1: nothing to synchronize
+                self.finish[tile] = r
+                continue
+            self.sim.at(r, lambda t, tile=tile, lvl=lvl: arrive(tile, lvl, t))
         self.sim.run()
         return self.overhead(requests)
+
+
+class NaiveBarrier(HierarchicalAMOBarrier):
+    """Single master tile accepts requests and dispatches responses (§4.1):
+    the star-topology instance of the generic AMO executor."""
+
+    def __init__(self, rows: int, cols: int, p: SimParams = DEFAULT_PARAMS):
+        super().__init__(schedule_ir.naive_barrier((rows, cols)), p)
+
+    def run(self, requests: Optional[Dict[Coord, int]] = None,
+            master: Coord = (0, 0)) -> int:
+        if master != (0, 0):
+            root = master[0] * self.cols + master[1]
+            world = self.rows * self.cols
+            gather = schedule_ir.Step(tuple(
+                schedule_ir.Transfer(r, root, (0,), reduce=True)
+                for r in range(world) if r != root), level=1)
+            prog = schedule_ir.Program("naive_barrier",
+                                       (self.rows, self.cols), 1, (gather,),
+                                       kind=schedule_ir.BARRIER)
+            HierarchicalAMOBarrier.__init__(self, prog, self.p)
+        return super().run(requests)
+
+
+class XYBarrier(HierarchicalAMOBarrier):
+    """Two 1D phases: rows barrier on row-masters (col 0), then row-masters
+    barrier on the global master (0,0); release cascades back (§4.1): the
+    two-level-tree instance of the generic AMO executor."""
+
+    def __init__(self, rows: int, cols: int, p: SimParams = DEFAULT_PARAMS):
+        super().__init__(schedule_ir.xy_barrier((rows, cols)), p)
+
+
+def tree_amo_barrier(shape: Tuple[int, ...],
+                     p: SimParams = DEFAULT_PARAMS) -> HierarchicalAMOBarrier:
+    """Beyond-paper software baseline: the H-tree topology run with AMO
+    counters/flags instead of dedicated FS modules (SynCron-style
+    hierarchical synchronization) — log-depth, but each level pays the
+    full software counter/poll protocol."""
+    return HierarchicalAMOBarrier(schedule_ir.tree_barrier(shape), p)
 
 
 # ---------------------------------------------------------------------------
@@ -411,6 +475,114 @@ class FractalSyncSim:
 
         overhead = max(finish.values()) - max(requests.values())
         return overhead, finish
+
+
+# ---------------------------------------------------------------------------
+# Generic NoC replay of any Schedule IR program
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NoCReplay:
+    """Result of replaying an IR program on the contended mesh NoC."""
+
+    overhead: int                  # Ŝ = max(F) − max(R), cycles
+    finish: Dict[int, int]         # per flat rank
+    total_msgs: int
+    total_hops: int
+
+    def __float__(self) -> float:
+        return float(self.overhead)
+
+
+def schedule_on_noc(prog: schedule_ir.Program,
+                    params: SimParams = DEFAULT_PARAMS,
+                    payload_flits: int = 1,
+                    requests: Optional[Dict[int, int]] = None) -> NoCReplay:
+    """Replay any Schedule IR program on the XY-routed contended mesh.
+
+    Each rank advances through the program's steps BSP-style: entering step
+    s it issues its step-s messages (size ∝ chunk fraction of
+    ``payload_flits``), then waits for every step-s message addressed to it
+    before advancing — so per-rank progress is asynchronous but data
+    dependencies are honored.  This gives *simulated* latency (link
+    contention included) for every software schedule, not just the two AMO
+    baselines the paper measures.
+    """
+    rows, cols = schedule_ir.as_2d(prog.shape)
+    world = prog.world
+    requests = requests or {r: 0 for r in range(world)}
+    sim = EventSim()
+    noc = NoC(sim, rows, cols, params)
+    p = params
+    n_steps = prog.num_steps
+    coord = lambda r: divmod(r, cols)  # noqa: E731
+
+    sends: List[List[List[schedule_ir.Transfer]]] = [
+        [[] for _ in range(n_steps)] for _ in range(world)]
+    expected = [[0] * n_steps for _ in range(world)]
+    for s, step in enumerate(prog.steps):
+        for t in step.transfers:
+            sends[t.src][s].append(t)
+            expected[t.dst][s] += 1
+
+    got = [[0] * n_steps for _ in range(world)]
+    arr_t = [[0] * n_steps for _ in range(world)]
+    entered = [[None] * n_steps for _ in range(world)]
+    advanced = [[False] * n_steps for _ in range(world)]
+    finish: Dict[int, int] = {}
+
+    def flits_of(tr: schedule_ir.Transfer) -> int:
+        return max(1, round(len(tr.chunks) / prog.n_chunks * payload_flits))
+
+    def try_advance(r: int, s: int) -> None:
+        if entered[r][s] is None or got[r][s] < expected[r][s] \
+                or advanced[r][s]:
+            return
+        advanced[r][s] = True
+        # bounce through the event queue: long runs of pass-through steps
+        # (e.g. a naive rank waiting its serial turn) must not recurse
+        sim.at(max(entered[r][s], arr_t[r][s], sim.now),
+               lambda tt, r=r, s=s: enter(r, s + 1, tt))
+
+    def enter(r: int, s: int, t: int) -> None:
+        if s == n_steps:
+            finish[r] = t + p.sw_post
+            return
+        # software issue overhead only where the rank actually acts; idle
+        # pass-through steps (e.g. a naive rank waiting its serial turn)
+        # cost nothing — the rank is simply parked on its receive
+        t_issue = t + ((p.sw_pre if s == 0 else p.sw_between)
+                       if sends[r][s] else 0)
+        for tr in sends[r][s]:
+            def deliver(tt: int, tr=tr, s=s) -> None:
+                d = tr.dst
+                got[d][s] += 1
+                arr_t[d][s] = max(arr_t[d][s], tt)
+                try_advance(d, s)
+            sim.at(t_issue,
+                   lambda tt, tr=tr, deliver=deliver: noc.send(
+                       tt, coord(tr.src), coord(tr.dst), deliver,
+                       flits=flits_of(tr)))
+        entered[r][s] = t_issue
+        try_advance(r, s)
+
+    for r, t0 in requests.items():
+        sim.at(t0, lambda t, r=r: enter(r, 0, t))
+    horizon = max(200_000, 1000 * (n_steps + 1) * max(1, payload_flits))
+    sim.run(horizon=horizon,
+            max_events=5_000_000 + 200 * world * max(1, n_steps))
+    overhead = max(finish.values()) - max(requests.values())
+    return NoCReplay(overhead=overhead, finish=finish,
+                     total_msgs=noc.total_msgs, total_hops=noc.total_hops)
+
+
+def software_schedule_latency(schedule: str, shape: Tuple[int, ...],
+                              params: SimParams = DEFAULT_PARAMS,
+                              payload_flits: int = 1) -> int:
+    """Simulated NoC latency of a *software all-reduce schedule* (cycles)."""
+    prog = schedule_ir.build_program(schedule, tuple(shape))
+    return schedule_on_noc(prog, params, payload_flits).overhead
 
 
 # ---------------------------------------------------------------------------

@@ -15,8 +15,16 @@ import math
 import jax
 import jax.numpy as jnp
 
-from .kernel import flash_attention_pallas
+from repro.compat import pallas_supported
+
 from .ref import flash_attention_ref
+
+try:
+    from .kernel import flash_attention_pallas
+    _PALLAS_OK = pallas_supported()
+except Exception:  # pragma: no cover - exercised only on broken installs
+    flash_attention_pallas = None
+    _PALLAS_OK = False
 
 
 def _on_tpu() -> bool:
@@ -29,6 +37,9 @@ def _flash(q, k, v, causal, window, softcap, interpret):
 
 
 def _fwd_impl(q, k, v, causal, window, softcap, interpret):
+    if not _PALLAS_OK:
+        return flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
     BH, Tq, D = q.shape
     Tk = k.shape[1]
     bq = min(128, Tq) if Tq % 128 else 128

@@ -8,8 +8,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import gemm_pallas
+from repro.compat import pallas_supported
+
 from .ref import gemm_ref
+
+try:  # pallas import itself can fail on old/backendless jax installs
+    from .kernel import gemm_pallas
+    _PALLAS_OK = pallas_supported()
+except Exception:  # pragma: no cover - exercised only on broken installs
+    gemm_pallas = None
+    _PALLAS_OK = False
 
 
 def _on_tpu() -> bool:
@@ -21,7 +29,11 @@ def _on_tpu() -> bool:
 def gemm(x: jax.Array, y: jax.Array, *, block_m: int = 128,
          block_n: int = 128, block_k: int = 128,
          interpret: bool | None = None) -> jax.Array:
-    """Padded blocked GEMM. interpret=None → auto (interpret off-TPU)."""
+    """Padded blocked GEMM. interpret=None → auto (interpret off-TPU).
+    Falls back to the jnp reference when the installed Pallas lacks the API
+    the kernel needs (guarded import above)."""
+    if not _PALLAS_OK:
+        return gemm_ref(x, y)
     interpret = (not _on_tpu()) if interpret is None else interpret
     M, K = x.shape
     _, N = y.shape

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_tpu_compiler_params
+
 
 def _tree_reduce_kernel(x_ref, o_ref, *, levels: int):
     acc = x_ref[...].astype(jnp.float32)      # [N, block]
@@ -50,7 +52,7 @@ def tree_reduce_pallas(x: jax.Array, *, block: int = 512,
         in_specs=[pl.BlockSpec((N, block), lambda j: (0, j))],
         out_specs=pl.BlockSpec((1, block), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((1, D), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)

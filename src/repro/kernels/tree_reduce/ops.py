@@ -7,8 +7,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import tree_reduce_pallas
+from repro.compat import pallas_supported
+
 from .ref import tree_reduce_ref
+
+try:
+    from .kernel import tree_reduce_pallas
+    _PALLAS_OK = pallas_supported()
+except Exception:  # pragma: no cover - exercised only on broken installs
+    tree_reduce_pallas = None
+    _PALLAS_OK = False
 
 
 def _on_tpu() -> bool:
@@ -19,7 +27,10 @@ def _on_tpu() -> bool:
 def tree_reduce(x: jax.Array, *, block: int = 512,
                 interpret: bool | None = None) -> jax.Array:
     """[N, D] → [D] deterministic pairwise-tree sum. N padded up to a power
-    of two with zeros; D padded to the block size."""
+    of two with zeros; D padded to the block size.  The reference fallback
+    keeps the same H-tree reduction order (bitwise determinism holds)."""
+    if not _PALLAS_OK:
+        return tree_reduce_ref(x)
     interpret = (not _on_tpu()) if interpret is None else interpret
     N, D = x.shape
     n2 = 1 << max(1, (N - 1).bit_length())

@@ -7,8 +7,10 @@ with per-host data sharding):
       --steps 50 --batch 8 --seq 128 --schedule fractal [--devices 8]
 
 ``--schedule xla`` uses the GSPMD tier; anything else uses the explicit BSP
-superstep (fractal | ring | xy | naive | hierarchical) with optional
-``--compression {bf16,int8}`` — the paper's technique end to end.
+superstep (fractal | ring | xy | naive | hierarchical | tree | auto) with
+optional ``--compression {bf16,int8}`` — the paper's technique end to end.
+``auto`` asks the cost-model autotuner (core.autotune) to pick the schedule
+for the mesh/payload at build time.
 """
 
 import argparse

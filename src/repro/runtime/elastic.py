@@ -23,8 +23,8 @@ from typing import Iterable, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import AxisType
 
+from repro.compat import HAS_AXIS_TYPE, AxisType
 from repro.core.tree import FractalTree
 from repro.runtime.fault_tolerance import surviving_domain
 
@@ -74,8 +74,10 @@ def build_mesh_from_tiles(tree: FractalTree, tiles: Sequence[Coord],
     plan = plan_recovery(tree, [t for t in tree.tiles() if t not in set(tiles)])
     rows, cols = plan.mesh_shape
     dev = np.array([devices[i] for i in flat_ids]).reshape(rows, cols)
-    return jax.sharding.Mesh(dev, axis_names=axis_names,
-                             axis_types=(AxisType.Auto,) * len(axis_names))
+    if HAS_AXIS_TYPE:
+        return jax.sharding.Mesh(dev, axis_names=axis_names,
+                                 axis_types=(AxisType.Auto,) * len(axis_names))
+    return jax.sharding.Mesh(dev, axis_names=axis_names)
 
 
 def reshard_state(state, mesh, spec_tree):

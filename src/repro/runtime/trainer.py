@@ -19,6 +19,7 @@ Two tiers (DESIGN.md §4):
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from functools import partial
@@ -32,7 +33,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core import collectives as C
 from repro.core.barrier import barrier_tie
-from repro.core.bsp import BSPConfig, bsp_shard_map, make_codec
+from repro.core.bsp import (BSPConfig, bsp_shard_map, make_codec,
+                            resolve_schedule)
 from repro.models import act_sharding as ACT
 from repro.models import sharding as SH
 from repro.models import transformer as T
@@ -177,6 +179,16 @@ def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
     world = math.prod(sizes)
     codec = make_codec(bsp.compression)
 
+    pshape = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.key(0))
+    flat_total = _flat_len(pshape, world, bsp.pad_align)
+    # "auto": one cost-model query against the flat f32 gradient payload,
+    # resolved once here so the traced step uses a concrete schedule
+    schedule = resolve_schedule(bsp, sizes, flat_total * 4)
+    if schedule != bsp.schedule:
+        print(f"autotune: schedule=auto → {schedule!r} "
+              f"(world={world}, payload={flat_total * 4 / 1e6:.1f} MB)")
+        bsp = dataclasses.replace(bsp, schedule=schedule)
+
     def local_step(params, flat_mu, flat_nu, ef, step, batch):
         (loss, metrics), grads = jax.value_and_grad(
             T.loss_fn, has_aux=True)(params, cfg, batch)
@@ -236,9 +248,7 @@ def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
         return params, new_mu, new_nu, ef, step + 1, metrics
 
     # --- shard_map plumbing: DP manual, model auto ---------------------------
-    pshape = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.key(0))
     rep = jax.tree.map(lambda _: P(), pshape)       # DP-replicated params
-    flat_total = _flat_len(pshape, world, bsp.pad_align)
     shard_spec = P(bsp.sync_axes)
     bspec = {"tokens": P(bsp.sync_axes, None),
              "labels": P(bsp.sync_axes, None)}

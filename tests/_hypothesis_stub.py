@@ -1,0 +1,153 @@
+"""Deterministic mini-`hypothesis` used when the real package is absent.
+
+The container that runs tier-1 does not ship ``hypothesis``; rather than
+turning every property test into a collection error (or a skip), the
+``conftest.py`` installs this stub into ``sys.modules`` so the property
+tests still run — as a fixed-seed randomized sweep of ``max_examples``
+draws.  Only the tiny API subset this repo uses is provided:
+
+    given, settings, strategies.{integers, floats, booleans, just,
+    sampled_from, lists, data}
+
+This is NOT hypothesis: no shrinking, no database, no coverage-guided
+generation.  Install the real package (requirements-dev.txt) for that.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+
+_SEED = 0xF5A1  # fixed: the sweep must be reproducible across runs
+
+
+class _Strategy:
+    def __init__(self, draw_fn, label="strategy"):
+        self._draw_fn = draw_fn
+        self._label = label
+
+    def draw(self, rng: random.Random):
+        return self._draw_fn(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw_fn(rng)),
+                         f"{self._label}.map")
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                v = self._draw_fn(rng)
+                if pred(v):
+                    return v
+            raise ValueError(f"filter on {self._label} found no value")
+        return _Strategy(draw, f"{self._label}.filter")
+
+    def __repr__(self):
+        return f"<stub {self._label}>"
+
+
+class _DataStrategy(_Strategy):
+    """Marker for ``st.data()``: given() passes a _DataObject instead."""
+
+    def __init__(self):
+        super().__init__(lambda rng: None, "data")
+
+
+class _DataObject:
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.draw(self._rng)
+
+
+def integers(min_value=0, max_value=2**31 - 1):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     f"integers({min_value},{max_value})")
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     f"floats({min_value},{max_value})")
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5, "booleans")
+
+
+def just(value):
+    return _Strategy(lambda rng: value, f"just({value!r})")
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from of empty sequence")
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))],
+                     "sampled_from")
+
+
+def lists(elements: _Strategy, min_size=0, max_size=None, unique=False):
+    def draw(rng):
+        hi = max_size if max_size is not None else min_size + 8
+        n = rng.randint(min_size, max(min_size, hi))
+        out, tries = [], 0
+        while len(out) < n and tries < 100 * (n + 1):
+            v = elements.draw(rng)
+            tries += 1
+            if unique and v in out:
+                continue
+            out.append(v)
+        return out
+    return _Strategy(draw, "lists")
+
+
+def data():
+    return _DataStrategy()
+
+
+def given(*strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(_SEED)
+            n = getattr(wrapper, "_stub_max_examples", 20)
+            for _ in range(n):
+                pos = [_DataObject(rng) if isinstance(s, _DataStrategy)
+                       else s.draw(rng) for s in strategies]
+                kws = {k: (_DataObject(rng) if isinstance(s, _DataStrategy)
+                           else s.draw(rng))
+                       for k, s in kw_strategies.items()}
+                fn(*args, *pos, **kwargs, **kws)
+        # pytest must not see the wrapped signature (it would resolve the
+        # property arguments as fixtures), so drop the wraps breadcrumb
+        del wrapper.__wrapped__
+        wrapper.hypothesis_stub = True
+        return wrapper
+    return decorate
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    def decorate(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def install() -> None:
+    """Register the stub as ``hypothesis`` / ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "just", "sampled_from",
+                 "lists", "data"):
+        setattr(st, name, globals()[name])
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

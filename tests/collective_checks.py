@@ -18,7 +18,9 @@ import jax.numpy as jnp  # noqa: E402
 from jax import lax  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core import collectives as C  # noqa: E402
+from repro.core import schedule_ir as IR  # noqa: E402
 from repro.core.bsp import BSPConfig, bsp_shard_map, sync_gradients  # noqa: E402
 from repro.core.barrier import SyncDomainMesh  # noqa: E402
 
@@ -32,9 +34,9 @@ def check(name, fn):
 
 
 def sm(fn, mesh, spec):
-    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
-                                 check_vma=False,
-                                 axis_names=frozenset(mesh.axis_names)))
+    return jax.jit(compat.shard_map(fn, mesh, spec, spec,
+                                    check_vma=False,
+                                    axis_names=frozenset(mesh.axis_names)))
 
 
 def main():
@@ -114,12 +116,13 @@ def main():
     bsh = np.asarray(grads["b"]).reshape(n_dev, 5)
     wmean, bmean = wsh.mean(0), bsh.mean(0)
 
-    for schedule in ("fractal", "ring", "xy", "naive", "hierarchical", "xla"):
+    for schedule in ("fractal", "ring", "xy", "naive", "hierarchical",
+                     "tree", "auto", "xla"):
         def do(schedule=schedule):
             cfg = BSPConfig(sync_axes=axes, schedule=schedule)
             f = lambda g: sync_gradients(g, cfg, sizes)
-            out = jax.jit(jax.shard_map(
-                f, mesh=mesh44, in_specs=(gspec,), out_specs=gspec,
+            out = jax.jit(compat.shard_map(
+                f, mesh44, (gspec,), gspec,
                 check_vma=False, axis_names=frozenset(("a", "b"))))(grads)
             w = np.asarray(out["w"]).reshape(n_dev, 1, 40, 3)
             b = np.asarray(out["b"]).reshape(n_dev, 5)
@@ -133,14 +136,26 @@ def main():
         def do(comp=comp, tol=tol):
             cfg = BSPConfig(sync_axes=axes, schedule="fractal", compression=comp)
             f = lambda g: sync_gradients(g, cfg, sizes)
-            out = jax.jit(jax.shard_map(
-                f, mesh=mesh44, in_specs=(gspec,), out_specs=gspec,
+            out = jax.jit(compat.shard_map(
+                f, mesh44, (gspec,), gspec,
                 check_vma=False, axis_names=frozenset(("a", "b"))))(grads)
             w = np.asarray(out["w"]).reshape(n_dev, 1, 40, 3)
             scale = np.abs(wmean).max()
             for d in range(n_dev):
                 np.testing.assert_allclose(w[d], wmean, atol=tol * scale)
         check(f"sync_gradients[fractal+{comp}] ≈ mean", do)
+
+    # --- IR lowering ≡ legacy hand-rolled lowering --------------------------
+    def ir_vs_legacy():
+        prog = IR.build_program("fractal", (4, 4))
+
+        def f(v):
+            a = C.ir_all_reduce(v, prog, axes)
+            b = C.fractal_all_reduce(v, axes, sizes)
+            return a - b
+        out = np.asarray(sm(f, mesh44, spec)(x))
+        np.testing.assert_allclose(out, 0.0, atol=1e-4 * np.abs(total).max())
+    check("IR lowering ≡ legacy fractal lowering", ir_vs_legacy)
 
     # --- manual sync axes + auto model axis ---------------------------------
     def auto_model():
@@ -163,7 +178,14 @@ def main():
         ref = (np.asarray(k) @ np.asarray(v)).reshape(4, 4, 8).sum(0)
         for d in range(4):
             np.testing.assert_allclose(got[d], ref, rtol=1e-4, atol=1e-4)
-    check("bsp_shard_map manual-DP + auto-model", auto_model)
+    if compat.HAS_JAX_SHARD_MAP:
+        check("bsp_shard_map manual-DP + auto-model", auto_model)
+    else:
+        # jax 0.4.x SPMD cannot partition partial-auto shard_map bodies on
+        # host platforms (PartitionId unsupported); the all-manual paths
+        # above cover the schedules themselves.
+        print("skip bsp_shard_map manual-DP + auto-model "
+              "(legacy jax: partial-auto shard_map unsupported)", flush=True)
 
     print(f"ALL OK ({len(PASS)} checks)")
 

@@ -6,6 +6,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import kernels_backend
+
+# When the installed jax's Pallas lacks the API the kernels need, the ops
+# transparently dispatch to the pure-jnp references — comparing reference
+# against reference proves nothing, so skip instead of 20+ hard failures.
+pytestmark = pytest.mark.skipif(
+    kernels_backend() != "pallas",
+    reason="Pallas API unsupported by installed jax (ops fall back to ref)")
+
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.gemm.ops import gemm

@@ -1,0 +1,235 @@
+"""Schedule IR invariants + its three backends (cost, simulator, autotune).
+
+The JAX-lowering backend is numerically validated against ``lax.psum`` on a
+16-device host mesh in ``tests/collective_checks.py`` (subprocess, slow);
+everything here is host-only and fast.
+"""
+
+import math
+
+import pytest
+
+from repro.core import autotune, cost_model as CM, schedule_ir as IR
+from repro.core.simulator import (DEFAULT_PARAMS, HierarchicalAMOBarrier,
+                                  NaiveBarrier, XYBarrier, schedule_on_noc,
+                                  software_schedule_latency, tree_amo_barrier)
+from repro.core.tree import FractalTree
+
+SHAPES = [(1, 2), (2, 2), (4, 4), (2, 4), (8, 8), (16,), (2, 4, 4)]
+
+
+# ------------------------------------------------------------ structure ---
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("name", IR.SCHEDULES)
+def test_all_reduce_programs_validate(name, shape):
+    prog = IR.build_program(name, shape)
+    stats = IR.validate(prog)   # raises ScheduleError on any violation
+    assert stats["steps"] == prog.num_steps
+    assert prog.world == math.prod(shape)
+
+
+@pytest.mark.parametrize("shape", [(4, 4), (2, 4), (16,)])
+@pytest.mark.parametrize("name", ["fractal", "ring"])
+def test_every_rank_sends_and_receives_once_per_step(name, shape):
+    prog = IR.build_program(name, shape)
+    world = prog.world
+    for step in prog.steps:
+        assert sorted(step.senders()) == list(range(world))
+        assert sorted(step.receivers()) == list(range(world))
+
+
+@pytest.mark.parametrize("shape", [(4, 4), (8, 8), (2, 4, 4)])
+def test_bandwidth_optimal_payload_fractions(shape):
+    """Fractal and ring each put exactly 2·V·(N−1)/N on the wire per rank."""
+    n = math.prod(shape)
+    want = 2 * (n - 1) / n
+    for name in ("fractal", "ring"):
+        fracs = IR.build_program(name, shape).per_rank_frac_sent()
+        assert all(abs(f - want) < 1e-12 for f in fracs.values()), name
+
+
+@pytest.mark.parametrize("shape", [(1, 2), (2, 2), (4, 4), (8, 8), (2, 4, 4)])
+def test_butterfly_partner_sequence_matches_fractal_tree(shape):
+    """The IR butterfly's partner at step i IS FractalTree.partner level i+1
+    — the schedule is the software image of the paper's H-tree recursion."""
+    prog = IR.build_program("fractal", shape)
+    tree = FractalTree(shape)
+    L = tree.num_levels
+    rs_steps = prog.steps[:L]
+    for i, step in enumerate(rs_steps):
+        assert step.level == i + 1
+        partner_of = {t.src: t.dst for t in step.transfers}
+        for rank in range(prog.world):
+            coords = IR.rank_coords(shape, rank)
+            want = IR.coords_rank(shape, tree.partner(coords, i + 1))
+            assert partner_of[rank] == want, (shape, i, rank)
+    # and the all-gather phase mirrors it in reverse
+    for i, step in enumerate(prog.steps[L:]):
+        assert step.level == L - i
+
+
+def test_validator_rejects_double_count():
+    # rank 1 sends its contribution to rank 0 twice → double-counted sum
+    t = IR.Transfer(1, 0, (0,), reduce=True)
+    bad = IR.Program("bad", (2,), 1,
+                     (IR.Step((t,)), IR.Step((t,))))
+    with pytest.raises(IR.ScheduleError, match="double-counted"):
+        IR.validate(bad)
+
+
+def test_validator_rejects_incomplete():
+    bad = IR.Program("bad", (2, 2), 4,
+                     (IR.Step((IR.Transfer(1, 0, (0,), reduce=True),)),))
+    with pytest.raises(IR.ScheduleError, match="incomplete"):
+        IR.validate(bad)
+
+
+def test_validator_rejects_double_send_per_step():
+    bad = IR.Program("bad", (4,), 4, (IR.Step((
+        IR.Transfer(0, 1, (0,), reduce=True),
+        IR.Transfer(0, 2, (1,), reduce=True))),))
+    with pytest.raises(IR.ScheduleError, match="sends twice"):
+        IR.validate(bad)
+
+
+def test_unknown_schedule_raises():
+    with pytest.raises(IR.ScheduleError, match="unknown schedule"):
+        IR.build_program("quantum", (4, 4))
+
+
+@pytest.mark.parametrize("shape", [(4, 4), (2, 4, 4)])
+def test_barrier_programs_validate(shape):
+    for name, builder in IR.BARRIER_BUILDERS.items():
+        prog = builder(shape)
+        assert prog.kind == IR.BARRIER
+        IR.validate(prog)
+
+
+def test_fsync_domain_barrier_levels():
+    # level ℓ butterfly barrier spans exactly 2^ℓ ranks per domain
+    for level in (0, 1, 2, 3, 4):
+        prog = IR.butterfly_barrier((4, 4), level=level)
+        assert prog.num_steps == level
+
+
+# ------------------------------------------------------- cost backend ----
+
+
+@pytest.mark.parametrize("shape,n", [((4, 4), 16), ((8, 8), 64), ((16,), 16)])
+@pytest.mark.parametrize("name", ["fractal", "ring", "naive", "tree"])
+def test_program_cost_matches_closed_forms(name, shape, n):
+    prog = IR.build_program(name, shape)
+    vol = 1.6e6
+    got = CM.program_cost(prog, vol, CM.MAGIA)
+    want = CM.schedule_cost(name, n, vol, CM.MAGIA)
+    assert got == pytest.approx(want, rel=1e-12), name
+
+
+def test_program_cost_xy_matches_closed_form():
+    prog = IR.build_program("xy", (4, 4))
+    got = CM.program_cost(prog, 1e6, CM.MAGIA)
+    assert got == pytest.approx(CM.xy_all_reduce(4, 4, 1e6, CM.MAGIA),
+                                rel=1e-12)
+
+
+def test_program_cost_hierarchical_tiered_links():
+    prog = IR.build_program("hierarchical", (4, 4))
+    got = CM.program_cost(prog, 1e6, CM.TPU_V5E_ICI, outer_link=CM.TPU_DCN)
+    want = CM.hierarchical_all_reduce(4, 4, 1e6, CM.TPU_V5E_ICI, CM.TPU_DCN)
+    assert got == pytest.approx(want, rel=1e-12)
+
+
+def test_mesh_contention_separates_butterfly_from_ring():
+    """On a mesh, the ring is cheaper per byte (hop-1 disjoint links) while
+    the butterfly is cheaper per step — the crossover the autotuner uses."""
+    fr = IR.build_program("fractal", (8, 8))
+    rg = IR.build_program("ring", (8, 8))
+    small, large = 64.0, 4e8
+    assert CM.program_cost(fr, small, CM.MAGIA, mesh_contention=True) < \
+        CM.program_cost(rg, small, CM.MAGIA, mesh_contention=True)
+    assert CM.program_cost(rg, large, CM.MAGIA, mesh_contention=True) < \
+        CM.program_cost(fr, large, CM.MAGIA, mesh_contention=True)
+
+
+# -------------------------------------------------- simulator backend ----
+
+
+@pytest.mark.parametrize("name", IR.SCHEDULES)
+def test_noc_replay_executes_every_schedule(name):
+    prog = IR.build_program(name, (4, 4))
+    replay = schedule_on_noc(prog)
+    assert replay.overhead > 0
+    assert replay.total_msgs == sum(len(s.transfers) for s in prog.steps)
+    assert len(replay.finish) == 16
+
+
+def test_noc_replay_latency_ordering():
+    """Log-depth schedules beat linear ones in the barrier regime."""
+    lat = {s: software_schedule_latency(s, (8, 8))
+           for s in ("fractal", "ring", "naive")}
+    assert lat["fractal"] < lat["naive"] < lat["ring"]
+
+
+def test_noc_replay_payload_scales_cost():
+    prog = IR.build_program("fractal", (4, 4))
+    small = schedule_on_noc(prog, payload_flits=1).overhead
+    large = schedule_on_noc(prog, payload_flits=512).overhead
+    assert large > small
+
+
+def test_amo_barriers_are_ir_instances():
+    """NaiveBarrier/XYBarrier now execute IR topologies through the generic
+    hierarchical AMO executor — same protocol, IR-supplied structure."""
+    nb = NaiveBarrier(4, 4)
+    assert isinstance(nb, HierarchicalAMOBarrier)
+    assert nb.prog.name == "naive_barrier"
+    assert len(nb.levels) == 1
+    xb = XYBarrier(4, 4)
+    assert isinstance(xb, HierarchicalAMOBarrier)
+    assert [len(lvl) for lvl in xb.levels] == [4, 1]   # 4 rows, 1 root
+
+
+def test_tree_amo_barrier_between_xy_and_fsync():
+    """The H-tree AMO barrier (SynCron-style) is log-depth but pays the
+    software protocol per level: slower than dedicated FSync wires, and on
+    small meshes the deeper tree costs more than XY's two levels."""
+    t = tree_amo_barrier((8, 8)).run()
+    xy = XYBarrier(8, 8, DEFAULT_PARAMS).run()
+    tree = FractalTree((8, 8))
+    assert t > tree.fsync_latency(pipelined=True)
+    assert 0 < t < 4 * xy   # same order of magnitude, log-depth structure
+
+
+# --------------------------------------------------------- autotuner -----
+
+
+def test_autotune_crossover():
+    assert autotune.pick_schedule((8, 8), 64.0, link=CM.MAGIA) == "fractal"
+    assert autotune.pick_schedule((8, 8), 4e8, link=CM.MAGIA) == "ring"
+
+
+def test_autotune_non_pow2_falls_back_to_ring_family():
+    ranking = autotune.rank_schedules((12,), 1e6, link=CM.MAGIA)
+    assert set(n for n, _ in ranking) <= {"ring", "xy", "naive"}
+
+
+def test_autotune_measured_refinement_overrides_model():
+    # model says fractal; measurements disagree → measurement wins
+    fake = {"fractal": 2.0, "hierarchical": 1.0, "ring": 3.0}
+    res = autotune.autotune((8, 8), 64.0, link=CM.MAGIA,
+                            measure=lambda s: fake.get(s, float("inf")),
+                            measure_top_k=3)
+    assert res.ranking[0][0] == "fractal"
+    assert res.schedule in fake and fake[res.schedule] == min(
+        fake[n] for n, _ in res.ranking[:3] if n in fake)
+
+
+def test_bsp_config_accepts_auto_and_tree():
+    from repro.core.bsp import BSPConfig, resolve_schedule
+    cfg = BSPConfig(schedule="auto")
+    assert resolve_schedule(cfg, (8, 8), 64.0) in IR.SCHEDULES
+    BSPConfig(schedule="tree")
+    with pytest.raises(ValueError):
+        BSPConfig(schedule="bogus")
