@@ -7,6 +7,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows.
   schedules  measured wall-time of the JAX collective schedules (16 host dev)
   schedule_matrix  Schedule-IR autotuning sweep: cost ranking × NoC replay ×
              measured lowering; asserts the butterfly↔ring payload crossover
+  overlap    bucketed-superstep sweep: bucket size × per-bucket schedule vs
+             monolithic; asserts overlap-aware predicted time < serial sum
   probes     XLA cost_analysis while-loop probe (motivates hlo_analysis)
   roofline   per-(arch×shape×mesh) roofline table from results/dryrun/*.json
 
@@ -25,7 +27,7 @@ if "XLA_FLAGS" not in os.environ or "device_count" not in os.environ.get(
                                + os.environ.get("XLA_FLAGS", ""))
 
 BENCHES = ("table1", "area", "scaling", "schedules", "schedule_matrix",
-           "probes", "roofline")
+           "overlap", "probes", "roofline")
 
 
 def main(argv=None) -> None:

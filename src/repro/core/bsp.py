@@ -22,12 +22,10 @@ keeps its tensor parallelism.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.flatten_util import ravel_pytree
 
 from repro import compat
 
@@ -43,13 +41,20 @@ class BSPConfig:
     sync_axes   : mesh axes forming the synchronization tree, outermost first
                   (e.g. ("pod","data")); their product is the BSP world.
     schedule    : gradient all-reduce schedule (see collectives.SCHEDULES),
-                  or "auto" — the cost-model autotuner picks per (mesh,
-                  payload) at trace/build time (core.autotune).
+                  or "auto" — the cost-model autotuner picks at trace/build
+                  time (core.autotune), per bucket when bucketing is on.
     compression : payload codec for the fractal schedule ("none"|"bf16"|"int8").
     fsync_level : barrier scope (None = root = whole world); lower levels
                   synchronize only a subtree (paper §3.2 domains).
     pad_align   : flat gradient vector padded to lcm(world, pad_align) so the
                   halving steps stay lane-aligned on TPU (128 lanes).
+    bucket_mb   : partition the gradient pytree into ~this many MB per
+                  bucket (reverse-layer order) and pipeline one collective
+                  per bucket (core.superstep.SuperstepEngine); None → one
+                  monolithic bucket (the pre-engine behavior).
+    overlap     : the bucketing A/B switch — False disables bucketing even
+                  when bucket_mb is set, collapsing the superstep back to
+                  the monolithic single-collective baseline.
     """
 
     sync_axes: Tuple[str, ...] = ("data",)
@@ -57,22 +62,20 @@ class BSPConfig:
     compression: str = "none"
     fsync_level: Optional[int] = None
     pad_align: int = 128
+    bucket_mb: Optional[float] = None
+    overlap: bool = True
 
     def __post_init__(self):
         if self.schedule != "auto" and \
                 self.schedule not in collectives.SCHEDULES:
             raise ValueError(f"unknown schedule {self.schedule!r}")
+        if self.bucket_mb is not None and self.bucket_mb <= 0:
+            raise ValueError(f"bucket_mb must be positive, "
+                             f"got {self.bucket_mb}")
 
 
 def _world(sizes: Sequence[int]) -> int:
     return math.prod(sizes)
-
-
-def _padded_len(n: int, world: int, align: int) -> int:
-    # world*align so even the smallest halved payload (n/world after the last
-    # reduce-scatter step) stays lane/compression-block aligned
-    unit = world * align
-    return ((n + unit - 1) // unit) * unit
 
 
 def make_codec(name: str):
@@ -105,27 +108,17 @@ def sync_gradients(grads, cfg: BSPConfig, sizes: Sequence[int],
 
     Must be called inside ``shard_map`` over ``cfg.sync_axes``.  Returns the
     synchronized pytree (mean over the BSP world by default).
+
+    Routed through the SuperstepEngine (``core.superstep``): with
+    ``cfg.bucket_mb`` unset this is one monolithic bucket (the historical
+    behavior); with it set, one pipelined collective per size-bounded
+    bucket, schedule autotuned per bucket when ``schedule="auto"``.
     """
     world = _world(sizes)
     if world == 1:
         return grads
-    flat, unravel = ravel_pytree(grads)
-    n = flat.shape[0]
-    padded = _padded_len(n, world, cfg.pad_align)
-    if padded != n:
-        flat = jnp.concatenate(
-            [flat, jnp.zeros((padded - n,), flat.dtype)])
-
-    codec = make_codec(cfg.compression)
-    schedule = resolve_schedule(cfg, sizes, padded * flat.dtype.itemsize)
-    if schedule == "fractal":
-        flat = collectives.fractal_all_reduce(flat, cfg.sync_axes, sizes,
-                                              codec=codec)
-    else:
-        flat = collectives.all_reduce(flat, schedule, cfg.sync_axes, sizes)
-    if mean:
-        flat = flat / world
-    return unravel(flat[:n])
+    from .superstep import engine_for
+    return engine_for(grads, cfg, sizes).sync(grads, mean=mean)
 
 
 def superstep(compute: Callable, communicate: Callable, cfg: BSPConfig,

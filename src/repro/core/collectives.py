@@ -379,3 +379,47 @@ def all_reduce(x: jax.Array, schedule: str, axis_names: AxisNames,
         return lax.psum(x, axis_names)
     prog = schedule_ir.build_program(schedule, tuple(sizes))
     return ir_all_reduce(x, prog, axis_names)
+
+
+def bit_reversed_index(axis_names: AxisNames, sizes: Sequence[int]
+                       ) -> jax.Array:
+    """Bit-reversal of this rank's flat index over log2(world) bits.
+
+    After recursive-halving reduce-scatter, rank i holds the CONTIGUOUS
+    payload chunk at bit-reversed position rev(i) — the coarsest split is
+    decided by bit 0.  Every consumer of the ZeRO-1 shard layout (trainer,
+    SuperstepEngine) derives shard placement from this one definition.
+    """
+    L = _n_levels(sizes)   # raises unless the world is a power of two
+    idx = flat_index(axis_names)
+    rev = jnp.zeros((), jnp.int32)
+    for b in range(L):
+        rev = rev | (((idx >> b) & 1) << (L - 1 - b))
+    return rev
+
+
+def reduce_scatter(x: jax.Array, schedule: str, axis_names: AxisNames,
+                   sizes: Sequence[int]) -> jax.Array:
+    """Schedule-dispatched reduce-scatter of a flat payload (sum, no mean).
+
+    Returns this rank's shard (leading dim / world) at the bit-reversed
+    position ``bit_reversed_index`` describes.  The fractal schedule
+    reduce-scatters natively (half the butterfly); every other schedule
+    falls back to its full all-reduce followed by a local slice — same
+    bytes on the wire as its all-reduce, same shard layout out.
+    """
+    world = math.prod(sizes)
+    if schedule == "fractal":
+        return fractal_reduce_scatter(x, axis_names, sizes)
+    shard_len = x.shape[0] // world
+    full = all_reduce(x, schedule, axis_names, sizes)
+    rev = bit_reversed_index(axis_names, sizes)
+    return lax.dynamic_slice_in_dim(full, rev * shard_len, shard_len, axis=0)
+
+
+def all_gather_flat(shard: jax.Array, axis_names: AxisNames,
+                    sizes: Sequence[int]) -> jax.Array:
+    """Inverse of ``reduce_scatter``'s placement: gather shards back into
+    the original flat order (the butterfly all-gather inverts the
+    bit-reversed scatter for every schedule, since the layout is shared)."""
+    return fractal_all_gather(shard, axis_names, sizes)

@@ -111,6 +111,30 @@ class Step:
 
 
 @dataclass(frozen=True)
+class BucketMeta:
+    """Which slice of a bucketed superstep payload a Program moves.
+
+    The SuperstepEngine (``core.superstep``) cuts the flat gradient vector
+    into size-bounded buckets and compiles one Program per bucket; this
+    metadata makes bucket identity part of the IR so every consumer — the
+    JAX lowering, the NoC replay, the cost model, the autotuner — agrees on
+    *which* bytes a program is responsible for and where they live in the
+    step's flat payload.
+
+    index        : bucket position in ready order (0 = first grads ready,
+                   i.e. the LAST layers of the model — reverse-layer order)
+    n_buckets    : total buckets in the superstep
+    offset_elems : start of this bucket in the bucket-ordered flat vector
+    length_elems : padded element count of this bucket
+    """
+
+    index: int
+    n_buckets: int
+    offset_elems: int
+    length_elems: int
+
+
+@dataclass(frozen=True)
 class Program:
     """A complete schedule: ordered steps over a flat rank space."""
 
@@ -119,6 +143,11 @@ class Program:
     n_chunks: int                # payload granularity (V / n_chunks per chunk)
     steps: Tuple[Step, ...]
     kind: str = ALL_REDUCE
+    bucket: Optional[BucketMeta] = None   # set when part of a bucketed step
+
+    def with_bucket(self, meta: BucketMeta) -> "Program":
+        return Program(self.name, self.shape, self.n_chunks, self.steps,
+                       self.kind, meta)
 
     @property
     def world(self) -> int:
@@ -143,9 +172,14 @@ class Program:
     def describe(self) -> str:
         msgs = sum(len(s.transfers) for s in self.steps)
         vol = max(self.per_rank_frac_sent().values(), default=0.0)
+        tag = ""
+        if self.bucket is not None:
+            tag = (f" bucket {self.bucket.index}/{self.bucket.n_buckets}"
+                   f" @{self.bucket.offset_elems}"
+                   f"+{self.bucket.length_elems}")
         return (f"{self.name}[{'x'.join(map(str, self.shape))}]: "
                 f"{self.num_steps} steps, {msgs} msgs, "
-                f"{vol:.3g}·V max per-rank send volume")
+                f"{vol:.3g}·V max per-rank send volume{tag}")
 
 
 class ScheduleError(ValueError):
@@ -406,7 +440,8 @@ def tree_all_reduce(shape: Shape) -> Program:
 
 
 def _replace_name(self: Program, name: str) -> Program:
-    return Program(name, self.shape, self.n_chunks, self.steps, self.kind)
+    return Program(name, self.shape, self.n_chunks, self.steps, self.kind,
+                   self.bucket)
 
 
 Program._replace_name = _replace_name  # small private helper

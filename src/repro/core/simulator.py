@@ -495,33 +495,78 @@ class NoCReplay:
         return float(self.overhead)
 
 
-def schedule_on_noc(prog: schedule_ir.Program,
-                    params: SimParams = DEFAULT_PARAMS,
-                    payload_flits: int = 1,
-                    requests: Optional[Dict[int, int]] = None) -> NoCReplay:
-    """Replay any Schedule IR program on the XY-routed contended mesh.
+@dataclass(frozen=True)
+class PipelineReplay:
+    """Result of replaying a *sequence* of bucket programs on one NoC.
 
-    Each rank advances through the program's steps BSP-style: entering step
-    s it issues its step-s messages (size ∝ chunk fraction of
-    ``payload_flits``), then waits for every step-s message addressed to it
-    before advancing — so per-rank progress is asynchronous but data
-    dependencies are honored.  This gives *simulated* latency (link
-    contention included) for every software schedule, not just the two AMO
-    baselines the paper measures.
+    ``program_finish[i]`` is the cycle at which the last rank completed
+    program i — the simulated analogue of ``OverlapTimeline.comm_end_s``,
+    with link contention between in-flight buckets included.
     """
-    rows, cols = schedule_ir.as_2d(prog.shape)
-    world = prog.world
+
+    overhead: int                  # max(F) − max(R) across the whole pipeline
+    finish: Dict[int, int]         # per flat rank, after the last program
+    program_finish: Tuple[int, ...]
+    total_msgs: int
+    total_hops: int
+
+    def __float__(self) -> float:
+        return float(self.overhead)
+
+
+def pipelined_on_noc(progs: Sequence[schedule_ir.Program],
+                     params: SimParams = DEFAULT_PARAMS,
+                     payload_flits: Optional[Sequence[int]] = None,
+                     ready: Optional[Sequence[int]] = None,
+                     requests: Optional[Dict[int, int]] = None
+                     ) -> PipelineReplay:
+    """Replay a pipeline of IR programs (superstep buckets) on a shared NoC.
+
+    Each rank advances through the concatenated step sequence BSP-style:
+    entering a step it issues its messages (size ∝ chunk fraction of that
+    program's ``payload_flits``), then waits for every message addressed to
+    it in that step before advancing.  A rank may not enter program i before
+    cycle ``ready[i]`` (gradient-readiness during backward) — but ranks
+    progress *independently*, so bucket i+1's messages from fast ranks
+    contend on the NoC with bucket i's stragglers: the overlap-aware mode
+    the cost model approximates analytically, simulated with real link
+    contention.
+    """
+    if not progs:
+        raise ValueError("need at least one program")
+    shape = progs[0].shape
+    if any(p.shape != shape for p in progs):
+        raise ValueError("all pipelined programs must share one mesh shape")
+    flits = list(payload_flits) if payload_flits is not None \
+        else [1] * len(progs)
+    ready = list(ready) if ready is not None else [0] * len(progs)
+    if not (len(progs) == len(flits) == len(ready)):
+        raise ValueError("progs, payload_flits, ready must align")
+
+    rows, cols = schedule_ir.as_2d(shape)
+    world = progs[0].world
     requests = requests or {r: 0 for r in range(world)}
     sim = EventSim()
     noc = NoC(sim, rows, cols, params)
     p = params
-    n_steps = prog.num_steps
     coord = lambda r: divmod(r, cols)  # noqa: E731
+
+    # concatenate the programs' steps; remember which program owns each step
+    steps: List[Tuple[int, schedule_ir.Step]] = []
+    start_step = []            # first combined-step index of each program
+    for i, prog in enumerate(progs):
+        start_step.append(len(steps))
+        steps.extend((i, st) for st in prog.steps)
+    n_steps = len(steps)
+    boundary = {s: i for i, s in enumerate(start_step)}   # step → program
+    last_of = {start_step[i + 1] - 1: i for i in range(len(progs) - 1)}
+    if n_steps:
+        last_of[n_steps - 1] = len(progs) - 1
 
     sends: List[List[List[schedule_ir.Transfer]]] = [
         [[] for _ in range(n_steps)] for _ in range(world)]
     expected = [[0] * n_steps for _ in range(world)]
-    for s, step in enumerate(prog.steps):
+    for s, (_, step) in enumerate(steps):
         for t in step.transfers:
             sends[t.src][s].append(t)
             expected[t.dst][s] += 1
@@ -531,9 +576,11 @@ def schedule_on_noc(prog: schedule_ir.Program,
     entered = [[None] * n_steps for _ in range(world)]
     advanced = [[False] * n_steps for _ in range(world)]
     finish: Dict[int, int] = {}
+    prog_finish = [0] * len(progs)
 
-    def flits_of(tr: schedule_ir.Transfer) -> int:
-        return max(1, round(len(tr.chunks) / prog.n_chunks * payload_flits))
+    def flits_of(s: int, tr: schedule_ir.Transfer) -> int:
+        i = steps[s][0]
+        return max(1, round(len(tr.chunks) / progs[i].n_chunks * flits[i]))
 
     def try_advance(r: int, s: int) -> None:
         if entered[r][s] is None or got[r][s] < expected[r][s] \
@@ -542,13 +589,17 @@ def schedule_on_noc(prog: schedule_ir.Program,
         advanced[r][s] = True
         # bounce through the event queue: long runs of pass-through steps
         # (e.g. a naive rank waiting its serial turn) must not recurse
-        sim.at(max(entered[r][s], arr_t[r][s], sim.now),
-               lambda tt, r=r, s=s: enter(r, s + 1, tt))
+        done = max(entered[r][s], arr_t[r][s], sim.now)
+        if s in last_of:
+            prog_finish[last_of[s]] = max(prog_finish[last_of[s]], done)
+        sim.at(done, lambda tt, r=r, s=s: enter(r, s + 1, tt))
 
     def enter(r: int, s: int, t: int) -> None:
         if s == n_steps:
             finish[r] = t + p.sw_post
             return
+        if s in boundary:      # bucket i's grads not ready before ready[i]
+            t = max(t, ready[boundary[s]])
         # software issue overhead only where the rank actually acts; idle
         # pass-through steps (e.g. a naive rank waiting its serial turn)
         # cost nothing — the rank is simply parked on its receive
@@ -561,20 +612,40 @@ def schedule_on_noc(prog: schedule_ir.Program,
                 arr_t[d][s] = max(arr_t[d][s], tt)
                 try_advance(d, s)
             sim.at(t_issue,
-                   lambda tt, tr=tr, deliver=deliver: noc.send(
+                   lambda tt, tr=tr, s=s, deliver=deliver: noc.send(
                        tt, coord(tr.src), coord(tr.dst), deliver,
-                       flits=flits_of(tr)))
+                       flits=flits_of(s, tr)))
         entered[r][s] = t_issue
         try_advance(r, s)
 
     for r, t0 in requests.items():
         sim.at(t0, lambda t, r=r: enter(r, 0, t))
-    horizon = max(200_000, 1000 * (n_steps + 1) * max(1, payload_flits))
+    max_flits = max([1, *flits])
+    horizon = max(200_000, 1000 * (n_steps + 1) * max_flits,
+                  2 * max([0, *ready]) + 1000 * (n_steps + 1) * max_flits)
     sim.run(horizon=horizon,
             max_events=5_000_000 + 200 * world * max(1, n_steps))
     overhead = max(finish.values()) - max(requests.values())
-    return NoCReplay(overhead=overhead, finish=finish,
-                     total_msgs=noc.total_msgs, total_hops=noc.total_hops)
+    return PipelineReplay(overhead=overhead, finish=finish,
+                          program_finish=tuple(prog_finish),
+                          total_msgs=noc.total_msgs,
+                          total_hops=noc.total_hops)
+
+
+def schedule_on_noc(prog: schedule_ir.Program,
+                    params: SimParams = DEFAULT_PARAMS,
+                    payload_flits: int = 1,
+                    requests: Optional[Dict[int, int]] = None) -> NoCReplay:
+    """Replay one Schedule IR program on the XY-routed contended mesh.
+
+    The single-program view of ``pipelined_on_noc``: per-rank progress is
+    asynchronous but data dependencies are honored, giving *simulated*
+    latency (link contention included) for every software schedule, not
+    just the two AMO baselines the paper measures.
+    """
+    out = pipelined_on_noc([prog], params, [payload_flits], [0], requests)
+    return NoCReplay(overhead=out.overhead, finish=out.finish,
+                     total_msgs=out.total_msgs, total_hops=out.total_hops)
 
 
 def software_schedule_latency(schedule: str, shape: Tuple[int, ...],

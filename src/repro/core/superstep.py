@@ -1,0 +1,309 @@
+"""SuperstepEngine: bucketed, overlap-aware BSP gradient synchronization.
+
+The paper makes the BSP barrier nearly free, which moves the superstep
+bottleneck to the communication phase itself.  The monolithic path
+(flatten → one all-reduce → unflatten) serializes compute and
+communication: no gradient byte moves until the *whole* backward pass has
+finished.  This module makes the Schedule IR a **runtime** concept:
+
+  1. the gradient pytree is partitioned into size-bounded **buckets** in
+     reverse-layer order (leaf order reversed), so bucket 0 — the LAST
+     layers — is complete while backward is still chewing on the first
+     layers;
+  2. each bucket is compiled to its own Schedule-IR ``Program`` (tagged
+     with ``BucketMeta`` so all IR consumers agree on bucket identity),
+     with the autotuner picking a schedule *per bucket* — small late
+     buckets lean butterfly (latency-bound), large early buckets lean ring
+     (bandwidth-bound);
+  3. the runtime lowering issues one collective per bucket inside the same
+     jitted superstep.  The collectives are data-independent, so XLA's
+     latency-hiding scheduler may overlap bucket i's communication with
+     whatever compute still feeds bucket j>i — the structural opportunity
+     the monolithic path denies it;
+  4. ``cost_model.overlap_step_cost`` and ``simulator.pipelined_on_noc``
+     price/replay the bucket pipeline on a *shared* fabric timeline, so
+     predicted step time reflects compute/comm overlap instead of a sum
+     (``benchmarks/overlap.py`` sweeps this against the monolithic
+     baseline).
+
+Numerics: bucketing permutes and re-groups the flat vector but reduces
+every element through the same schedule arithmetic, so the bucketed sync
+is equivalent to the monolithic path within f32 tolerance (bit-identical
+for codec-free schedules; asserted in ``tests/superstep_checks.py``).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import collectives as C
+from . import schedule_ir
+from .bsp import BSPConfig, make_codec
+from .cost_model import (LinkParams, OverlapTimeline, TPU_V5E_ICI,
+                         overlap_step_cost)
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    """Host-static shape/dtype of one gradient (or parameter) leaf."""
+
+    shape: Tuple[int, ...]
+    dtype: str
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One size-bounded slice of the bucket-ordered flat payload.
+
+    ``leaf_ids`` index the *original* pytree leaf list; buckets concatenate
+    leaves in reverse-layer order, so bucket 0 holds the tail of the model.
+    ``offset``/``length`` locate the bucket's padded segment in the
+    bucket-ordered flat vector (elements, not bytes).
+    """
+
+    index: int
+    leaf_ids: Tuple[int, ...]
+    raw: int                      # unpadded element count
+    offset: int                   # start in the bucket-ordered flat vector
+    length: int                   # padded element count (divides by world)
+
+    def meta(self, n_buckets: int) -> schedule_ir.BucketMeta:
+        return schedule_ir.BucketMeta(index=self.index, n_buckets=n_buckets,
+                                      offset_elems=self.offset,
+                                      length_elems=self.length)
+
+
+def partition_buckets(leaf_sizes: Sequence[int], order: Sequence[int],
+                      bucket_elems: Optional[int], pad_unit: int
+                      ) -> Tuple[Bucket, ...]:
+    """Greedy size-bounded partition of leaves (in ``order``) into buckets.
+
+    A bucket closes once it holds ≥ ``bucket_elems`` raw elements (None →
+    one bucket holds everything).  A single leaf larger than the bound gets
+    its own bucket — the bound is a target, not a hard cap.  Every bucket
+    is padded up to a multiple of ``pad_unit`` (world × pad_align, so the
+    halving steps and per-rank shards stay lane-aligned).
+    """
+    groups: List[List[int]] = []
+    cur: List[int] = []
+    cur_elems = 0
+    for i in order:
+        if cur and bucket_elems is not None and \
+                cur_elems + leaf_sizes[i] > bucket_elems:
+            groups.append(cur)
+            cur, cur_elems = [], 0
+        cur.append(i)
+        cur_elems += leaf_sizes[i]
+    if cur:
+        groups.append(cur)
+    buckets: List[Bucket] = []
+    offset = 0
+    for bi, ids in enumerate(groups):
+        raw = sum(leaf_sizes[i] for i in ids)
+        length = ((raw + pad_unit - 1) // pad_unit) * pad_unit
+        buckets.append(Bucket(index=bi, leaf_ids=tuple(ids), raw=raw,
+                              offset=offset, length=length))
+        offset += length
+    return tuple(buckets)
+
+
+class SuperstepEngine:
+    """Compile-once bucket plan + runtime lowering for one (pytree, mesh).
+
+    Everything the engine computes is host-static (leaf specs, mesh shape,
+    config), so it is safe to build at trace time and cache; the runtime
+    methods (``pack``/``sync``/ZeRO helpers) are pure traced functions.
+    """
+
+    def __init__(self, leaf_specs: Sequence[LeafSpec], cfg: BSPConfig,
+                 sizes: Sequence[int], zero1: bool = False):
+        self.cfg = cfg
+        self.sizes = tuple(sizes)
+        self.axes = cfg.sync_axes
+        self.world = math.prod(self.sizes)
+        self.leaf_specs = tuple(leaf_specs)
+        self.codec = make_codec(cfg.compression)
+        # zero1: schedule picks price the trainer lowering (RS + shard
+        # update + publish all-gather) instead of a bare all-reduce
+        self.zero1 = zero1
+
+        leaf_sizes = [s.size for s in self.leaf_specs]
+        order = tuple(reversed(range(len(self.leaf_specs))))
+        pad_unit = max(1, self.world) * cfg.pad_align
+        self.flat_itemsize = int(jnp.dtype(self._flat_dtype()).itemsize)
+        bucket_elems = None
+        if cfg.bucket_mb is not None and cfg.overlap:
+            bucket_elems = max(
+                1, int(cfg.bucket_mb * 1e6 / self.flat_itemsize))
+        self.buckets = partition_buckets(leaf_sizes, order, bucket_elems,
+                                         pad_unit)
+        self.total_padded = sum(b.length for b in self.buckets)
+
+        if cfg.schedule == "auto":
+            from .autotune import pick_bucket_schedules
+            self.schedules = pick_bucket_schedules(
+                self.sizes,
+                [b.length * self.flat_itemsize for b in self.buckets],
+                zero1_publish=zero1)
+        else:
+            self.schedules = (cfg.schedule,) * len(self.buckets)
+
+    # -- plan inspection ----------------------------------------------------
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    def shard_len(self, bucket: Bucket) -> int:
+        return bucket.length // self.world
+
+    def shard_offsets(self) -> Tuple[int, ...]:
+        """Per-bucket start of this rank's shard in the rank-local moment
+        vector (bucket-ordered concat of per-bucket shards)."""
+        out, acc = [], 0
+        for b in self.buckets:
+            out.append(acc)
+            acc += self.shard_len(b)
+        return tuple(out)
+
+    def programs(self) -> Tuple[schedule_ir.Program, ...]:
+        """Bucket-tagged IR programs (one per bucket; "xla" not lowerable)."""
+        out = []
+        for b, name in zip(self.buckets, self.schedules):
+            if name == "xla":
+                raise ValueError("'xla' buckets have no IR program")
+            prog = schedule_ir.build_program(name, self.sizes)
+            out.append(prog.with_bucket(b.meta(self.n_buckets)))
+        return tuple(out)
+
+    def describe(self) -> str:
+        bs = self.flat_itemsize
+        parts = ", ".join(
+            f"b{b.index}:{b.length * bs / 1e6:.1f}MB→{s}"
+            for b, s in zip(self.buckets, self.schedules))
+        return (f"{self.n_buckets} bucket(s) over world {self.world} "
+                f"({self.total_padded * bs / 1e6:.1f}MB padded): {parts}")
+
+    def timeline(self, backward_s: float,
+                 link: LinkParams = TPU_V5E_ICI,
+                 outer_link: Optional[LinkParams] = None,
+                 mesh_contention: bool = True) -> OverlapTimeline:
+        """Overlap-aware predicted step time for a given backward duration.
+
+        Bucket i (reverse-layer) becomes ready once backward has produced
+        its slice of the gradients: ready_i = backward_s × (cumulative
+        parameter fraction through bucket i) — last layers first.
+        """
+        total_raw = max(1, sum(b.raw for b in self.buckets))
+        ready, cum = [], 0
+        for b in self.buckets:
+            cum += b.raw
+            ready.append(backward_s * cum / total_raw)
+        vols = [float(b.length * self.flat_itemsize) for b in self.buckets]
+        return overlap_step_cost(self.programs(), vols, ready, link,
+                                 outer_link, mesh_contention)
+
+    # -- runtime lowering ---------------------------------------------------
+
+    def _flat_dtype(self):
+        if not self.leaf_specs:
+            return jnp.dtype(jnp.float32)
+        return jnp.result_type(*[jnp.dtype(s.dtype)
+                                 for s in self.leaf_specs])
+
+    def pack(self, leaves: Sequence[jax.Array],
+             dtype=None) -> List[jax.Array]:
+        """Leaves → per-bucket padded flat vectors (bucket-ordered)."""
+        dtype = dtype or self._flat_dtype()
+        parts = []
+        for b in self.buckets:
+            segs = [leaves[i].reshape(-1).astype(dtype) for i in b.leaf_ids]
+            flat = segs[0] if len(segs) == 1 else jnp.concatenate(segs)
+            if b.raw != b.length:
+                flat = jnp.concatenate(
+                    [flat, jnp.zeros((b.length - b.raw,), dtype)])
+            parts.append(flat)
+        return parts
+
+    def unpack(self, parts: Sequence[jax.Array],
+               like_leaves: Sequence[jax.Array]) -> List[jax.Array]:
+        """Per-bucket flat vectors → leaves (original order, original
+        dtypes)."""
+        out: List[Optional[jax.Array]] = [None] * len(self.leaf_specs)
+        for b, part in zip(self.buckets, parts):
+            off = 0
+            for i in b.leaf_ids:
+                spec = self.leaf_specs[i]
+                seg = lax.slice_in_dim(part, off, off + spec.size)
+                out[i] = seg.reshape(spec.shape).astype(like_leaves[i].dtype)
+                off += spec.size
+        return out  # type: ignore[return-value]
+
+    def _bucket_all_reduce(self, part: jax.Array, schedule: str) -> jax.Array:
+        if schedule == "xla":
+            return lax.psum(part, self.axes)
+        if schedule == "fractal":
+            return C.fractal_all_reduce(part, self.axes, self.sizes,
+                                        codec=self.codec)
+        return C.all_reduce(part, schedule, self.axes, self.sizes)
+
+    def sync(self, grads: Any, mean: bool = True) -> Any:
+        """Bucketed all-reduce of a gradient pytree — the drop-in
+        replacement for the monolithic ``bsp.sync_gradients`` body."""
+        if self.world == 1:
+            return grads
+        leaves, treedef = jax.tree.flatten(grads)
+        parts = self.pack(leaves)
+        out_parts = []
+        for b, schedule, part in zip(self.buckets, self.schedules, parts):
+            red = self._bucket_all_reduce(part, schedule)
+            if mean:
+                red = red / self.world
+            out_parts.append(red)
+        return treedef.unflatten(self.unpack(out_parts, leaves))
+
+    def reduce_scatter_bucket(self, part: jax.Array,
+                              schedule: str) -> jax.Array:
+        """Sum-reduce-scatter of one bucket part (ZeRO-1 grad shard)."""
+        return C.reduce_scatter(part, schedule, self.axes, self.sizes)
+
+    def all_gather_bucket(self, shard: jax.Array) -> jax.Array:
+        """Gather updated per-rank shards back into bucket flat order."""
+        return C.all_gather_flat(shard, self.axes, self.sizes)
+
+
+def leaf_specs_of(tree: Any, force_dtype=None) -> Tuple[LeafSpec, ...]:
+    """LeafSpecs of a pytree of arrays / ShapeDtypeStructs."""
+    return tuple(
+        LeafSpec(shape=tuple(l.shape),
+                 dtype=jnp.dtype(force_dtype or l.dtype).name)
+        for l in jax.tree.leaves(tree))
+
+
+@lru_cache(maxsize=64)
+def _cached_engine(leaf_specs: Tuple[LeafSpec, ...], cfg: BSPConfig,
+                   sizes: Tuple[int, ...], zero1: bool) -> SuperstepEngine:
+    return SuperstepEngine(leaf_specs, cfg, sizes, zero1=zero1)
+
+
+def engine_for(tree: Any, cfg: BSPConfig, sizes: Sequence[int],
+               force_dtype=None, zero1: bool = False) -> SuperstepEngine:
+    """The (cached) engine for this pytree's leaf structure.
+
+    The plan depends only on leaf shapes/dtypes + config + mesh (+ the
+    zero1 pricing mode), all host-static, so repeated traces reuse one
+    engine.
+    """
+    return _cached_engine(leaf_specs_of(tree, force_dtype), cfg,
+                          tuple(sizes), zero1)

@@ -11,6 +11,12 @@ superstep (fractal | ring | xy | naive | hierarchical | tree | auto) with
 optional ``--compression {bf16,int8}`` — the paper's technique end to end.
 ``auto`` asks the cost-model autotuner (core.autotune) to pick the schedule
 for the mesh/payload at build time.
+
+``--bucket-mb N`` partitions the gradients into ~N MB reverse-layer buckets
+and pipelines one collective per bucket (SuperstepEngine); with
+``--schedule auto`` the autotuner picks a schedule *per bucket*.
+``--no-overlap`` is the A/B switch back to the monolithic single-collective
+superstep; ``--grad-accum K`` accumulates over K micro-batches per rank.
 """
 
 import argparse
@@ -27,6 +33,15 @@ def main(argv=None):
     ap.add_argument("--schedule", default="fractal")
     ap.add_argument("--compression", default="none")
     ap.add_argument("--fsync-level", type=int, default=None)
+    ap.add_argument("--bucket-mb", type=float, default=None,
+                    help="pipeline gradient sync over ~N MB buckets "
+                         "(reverse-layer order; default: monolithic)")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="--no-overlap collapses bucketing back to the "
+                         "monolithic superstep (A/B baseline)")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="micro-batches accumulated per rank per superstep")
     ap.add_argument("--devices", type=int, default=0,
                     help="host-device override (set before jax init)")
     ap.add_argument("--checkpoint-dir", default=None)
@@ -66,6 +81,7 @@ def main(argv=None):
     print(f"arch={cfg.name} devices={n_dev} params="
           f"{sum(x.size for x in jax.tree.leaves(params)):,}")
 
+    ckpt_meta = {}
     if args.schedule == "xla":
         step_fn, (pspec, ospec, bspec) = trainer.make_gspmd_train_step(
             cfg, mesh, acfg)
@@ -77,16 +93,21 @@ def main(argv=None):
     else:
         bsp = BSPConfig(sync_axes=("data",), schedule=args.schedule,
                         compression=args.compression,
-                        fsync_level=args.fsync_level)
-        step_fn, init_state = trainer.make_bsp_train_step(cfg, mesh, acfg, bsp)
+                        fsync_level=args.fsync_level,
+                        bucket_mb=args.bucket_mb,
+                        overlap=args.overlap)
+        step_fn, init_state = trainer.make_bsp_train_step(
+            cfg, mesh, acfg, bsp, grad_accum=args.grad_accum)
         state = init_state(params)
+        ckpt_meta = {"superstep_layout": init_state.superstep_layout}
         bshard = {k: NamedSharding(mesh, P("data", *([None] * pad)))
                   for k, pad in (("tokens", 1), ("labels", 1),
                                  ("frontend", 2))}
         if not cfg.frontend:
             bshard.pop("frontend")
 
-    state, start = resume_or_init(args.checkpoint_dir, state)
+    state, start = resume_or_init(args.checkpoint_dir, state,
+                                  expect_meta=ckpt_meta)
     data = SyntheticLM(cfg, DataConfig(global_batch=args.batch,
                                        seq_len=args.seq, seed=args.seed))
     loop = TrainLoop(
@@ -94,7 +115,7 @@ def main(argv=None):
         cfg=LoopConfig(total_steps=args.steps,
                        checkpoint_every=args.checkpoint_every,
                        checkpoint_dir=args.checkpoint_dir),
-        batch_shardings=bshard, start_step=start)
+        batch_shardings=bshard, start_step=start, ckpt_meta=ckpt_meta)
     out = loop.run()
     losses = [h["loss"] for h in out["history"]]
     if losses:

@@ -41,6 +41,10 @@ class LoopConfig:
     log_every: int = 10
     checkpoint_dir: Optional[str] = None
     keep_checkpoints: int = 3
+    # when > 0 and stragglers are detected, compute a proportional
+    # micro-batch rebalance over this many micro-batches per superstep and
+    # surface it (printed + appended to TrainLoop.rebalance_history)
+    rebalance_microbatches: int = 0
 
 
 @dataclass
@@ -54,6 +58,44 @@ class TrainLoop:
     stragglers: StragglerTracker = field(default_factory=StragglerTracker)
     start_step: int = 0
     history: list = field(default_factory=list)
+    rebalance_history: list = field(default_factory=list)
+    # this host's BSP rank for the wall-clock fallback (multi-host runners
+    # pass jax.process_index(); single-process runs default to rank 0)
+    host_rank: int = 0
+    # extra metadata stamped into every checkpoint (e.g. the trainer's
+    # superstep_layout fingerprint, validated on resume)
+    ckpt_meta: Dict[str, Any] = field(default_factory=dict)
+
+    def _record_durations(self, metrics, dt: float) -> None:
+        """Per-rank superstep durations → straggler tracker.
+
+        Preferred source: a ``per_rank_step_s`` entry in the step metrics
+        (a length-world vector of measured rank durations, e.g. from a
+        pod-scale runner's per-host timers).  Fallback: this host's
+        wall-clock under its own rank — on >1 process every host records
+        its own row, so the tracker sees real per-rank data either way.
+        """
+        per_rank = metrics.get("per_rank_step_s") \
+            if isinstance(metrics, dict) else None
+        if per_rank is not None:
+            for r, v in enumerate(np.asarray(per_rank).reshape(-1)):
+                self.stragglers.record(int(r), float(v))
+        else:
+            self.stragglers.record(self.host_rank, dt)
+
+    def _maybe_rebalance(self, step: int) -> None:
+        if not self.cfg.rebalance_microbatches:
+            return
+        slow = self.stragglers.stragglers()
+        if not slow:
+            return
+        ranks = sorted(self.stragglers.durations)
+        shares = self.stragglers.rebalanced_shares(
+            ranks, self.cfg.rebalance_microbatches)
+        self.rebalance_history.append(
+            {"step": step, "stragglers": sorted(slow), "shares": shares})
+        print(f"step {step:5d} stragglers {sorted(slow)} "
+              f"-> micro-batch shares {shares}", flush=True)
 
     def run(self) -> Dict[str, Any]:
         ckpt = (CheckpointManager(self.cfg.checkpoint_dir,
@@ -72,7 +114,8 @@ class TrainLoop:
                 state = tuple(state_parts)
                 jax.block_until_ready(state[0])
                 dt = time.monotonic() - t0
-                self.stragglers.record(0, dt)
+                self._record_durations(metrics, dt)
+                self._maybe_rebalance(step)
 
                 if self.monitor is not None:
                     failed = self.monitor.failed_hosts()
@@ -86,15 +129,19 @@ class TrainLoop:
                           flush=True)
                 step += 1
                 if ckpt and step % self.cfg.checkpoint_every == 0:
-                    ckpt.save(step, state, meta={"data_step": step})
+                    ckpt.save(step, state,
+                              meta={**self.ckpt_meta, "data_step": step})
         finally:
             prefetch.close()
             if ckpt:
                 ckpt.wait()
         if ckpt and step % self.cfg.checkpoint_every != 0:
-            ckpt.save(step, state, meta={"data_step": step}, blocking=True)
+            ckpt.save(step, state,
+                      meta={**self.ckpt_meta, "data_step": step},
+                      blocking=True)
         self.state = state
-        return {"final_step": step, "history": self.history}
+        return {"final_step": step, "history": self.history,
+                "rebalance": self.rebalance_history}
 
     def _place(self, host_batch):
         if self.batch_shardings is None:
@@ -105,8 +152,16 @@ class TrainLoop:
         }
 
 
-def resume_or_init(ckpt_dir: Optional[str], like_state):
-    """(state, start_step) — restored from the latest checkpoint if any."""
+def resume_or_init(ckpt_dir: Optional[str], like_state, expect_meta=None):
+    """(state, start_step) — restored from the latest checkpoint if any.
+
+    ``expect_meta`` entries are validated against the stored metadata and
+    a mismatch OR absence raises: the flat moment vectors restore
+    shape-compatibly under a different superstep bucket layout (or the
+    pre-engine forward leaf order, which stamped no tag at all) but bind
+    every moment to the wrong parameter slice — silent corruption, so the
+    resume must fail loudly instead.
+    """
     if not ckpt_dir:
         return like_state, 0
     mgr = CheckpointManager(ckpt_dir)
@@ -114,4 +169,12 @@ def resume_or_init(ckpt_dir: Optional[str], like_state):
     if out is None:
         return like_state, 0
     state, meta = out
+    for key, want in (expect_meta or {}).items():
+        got = meta.get(key)
+        if got != want:
+            raise RuntimeError(
+                f"checkpoint {key!r} mismatch: stored {got!r} vs expected "
+                f"{want!r} — the flat state layout differs (different "
+                f"--bucket-mb, or a checkpoint from before the bucketed "
+                f"engine); restart from scratch or re-mesh explicitly")
     return state, int(meta.get("data_step", meta.get("step", 0)))

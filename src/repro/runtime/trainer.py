@@ -9,17 +9,20 @@ Two tiers (DESIGN.md §4):
   * ``make_bsp_train_step`` — the paper's technique as a first-class feature:
     the whole step runs inside ``shard_map`` with the DP axes *manual* and the
     model axis auto (TP stays GSPMD).  Parameters are DP-replicated; gradients
-    are flattened and pushed through the explicit FractalSync-family schedule
-    (fractal | ring | xy | naive | hierarchical, ± payload compression);
-    optimizer moments are ZeRO-1 sharded over the flat vector — each BSP rank
-    updates 1/world of the parameters between the fractal reduce-scatter and
-    all-gather (the bandwidth-optimal H-tree form), then the fsync barrier
-    closes the superstep.
+    are partitioned by the SuperstepEngine into reverse-layer buckets and
+    pipelined through explicit FractalSync-family schedules — one collective
+    per bucket, autotuned per bucket under ``schedule="auto"``, ± payload
+    compression; optimizer moments are ZeRO-1 sharded per bucket — each BSP
+    rank updates 1/world of every bucket between its reduce-scatter and
+    all-gather (the bandwidth-optimal H-tree form), then a single fsync
+    barrier closes the superstep.  ``grad_accum`` splits the rank batch into
+    micro-batches (the knob elastic re-meshing scales to preserve the global
+    batch).
 """
 
 from __future__ import annotations
 
-import dataclasses
+import hashlib
 import math
 from dataclasses import dataclass
 from functools import partial
@@ -27,14 +30,13 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import collectives as C
+from repro.core import superstep
 from repro.core.barrier import barrier_tie
-from repro.core.bsp import (BSPConfig, bsp_shard_map, make_codec,
-                            resolve_schedule)
+from repro.core.bsp import BSPConfig, bsp_shard_map, make_codec
 from repro.models import act_sharding as ACT
 from repro.models import sharding as SH
 from repro.models import transformer as T
@@ -157,95 +159,138 @@ class BSPTrainState:
     step: jax.Array
 
 
-def _flat_len(pshape, world: int, align: int) -> int:
-    n = sum(int(math.prod(l.shape)) for l in jax.tree.leaves(pshape))
-    unit = world * align
-    return ((n + unit - 1) // unit) * unit
-
-
 def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
-                        bsp: BSPConfig):
-    """Explicit-schedule BSP superstep:
+                        bsp: BSPConfig, grad_accum: int = 1):
+    """Explicit-schedule BSP superstep, pipelined over gradient buckets:
 
-      compute:     local fwd/bwd on this rank's micro-batch
-      communicate: flat grads → [EF] → fractal reduce-scatter (or full
-                   schedule) with optional payload compression
-      update:      AdamW on this rank's 1/world flat shard (ZeRO-1)
-      publish:     fractal all-gather of updated params
-      barrier:     fsync(level) token tied into outputs
+      compute:     local fwd/bwd on this rank's micro-batch(es) —
+                   ``grad_accum`` > 1 splits the rank batch and accumulates
+                   (the knob ElasticPlan.grad_accum_scale raises to keep the
+                   global batch after re-meshing)
+      communicate: per SuperstepEngine bucket (reverse-layer order, schedule
+                   autotuned per bucket under ``schedule="auto"``):
+                   flat bucket grads → [EF] → reduce-scatter
+      update:      AdamW on this rank's 1/world shard of each bucket (ZeRO-1)
+      publish:     all-gather of the updated shards, bucket by bucket
+      barrier:     one fsync(level) token closes the whole superstep
+
+    The per-bucket collectives are data-independent, so XLA may overlap
+    bucket i's communication with the compute that feeds bucket j>i — the
+    structural overlap the monolithic path (one bucket) cannot express.
     """
     ACT.clear_policy()   # manual-DP body: no data-axis GSPMD constraints
+    if grad_accum < 1:
+        raise ValueError(f"grad_accum must be >= 1, got {grad_accum}")
     sizes = tuple(mesh.shape[a] for a in bsp.sync_axes)
     world = math.prod(sizes)
     codec = make_codec(bsp.compression)
 
     pshape = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.key(0))
-    flat_total = _flat_len(pshape, world, bsp.pad_align)
-    # "auto": one cost-model query against the flat f32 gradient payload,
-    # resolved once here so the traced step uses a concrete schedule
-    schedule = resolve_schedule(bsp, sizes, flat_total * 4)
-    if schedule != bsp.schedule:
-        print(f"autotune: schedule=auto → {schedule!r} "
-              f"(world={world}, payload={flat_total * 4 / 1e6:.1f} MB)")
-        bsp = dataclasses.replace(bsp, schedule=schedule)
+    # the engine's flat layout is f32 (grads/moments are f32 regardless of
+    # param dtype); plan once at build time and log the bucket decisions
+    engine = superstep.engine_for(pshape, bsp, sizes,
+                                  force_dtype=jnp.float32, zero1=True)
+    flat_total = engine.total_padded
+    print(f"superstep: {engine.describe()}")
+    # fingerprint of the flat moment layout (bucket boundaries × world):
+    # checkpoints carry it so a resume under a different --bucket-mb (or a
+    # pre-engine moment ordering) fails loudly instead of silently binding
+    # moments to the wrong parameter slices (same shape, different layout)
+    layout = ",".join(f"{b.offset}+{b.length}" for b in engine.buckets)
+    layout_tag = "zero1:" + hashlib.sha1(
+        f"w{world}:{layout}".encode()).hexdigest()[:12]
+    shard_lens = [engine.shard_len(b) for b in engine.buckets]
+    shard_offs = engine.shard_offsets()
+
+    def local_grads(params, batch):
+        """loss/metrics/grads for this rank, with optional accumulation.
+
+        Accumulation runs as a ``lax.scan`` over micro-batches so the
+        compiled program holds ONE forward/backward regardless of
+        ``grad_accum`` — an elastic re-mesh that raises the factor must
+        not also inflate recompile time linearly.
+        """
+        vag = jax.value_and_grad(T.loss_fn, has_aux=True)
+        if grad_accum == 1:
+            (loss, metrics), grads = vag(params, cfg, batch)
+            return loss, metrics, grads
+        b_local = jax.tree.leaves(batch)[0].shape[0]
+        if b_local % grad_accum:
+            raise ValueError(f"per-rank batch {b_local} not divisible by "
+                             f"grad_accum {grad_accum}")
+        micro = jax.tree.map(
+            lambda v: v.reshape((grad_accum, v.shape[0] // grad_accum)
+                                + v.shape[1:]), batch)
+        first = jax.tree.map(lambda v: v[0], micro)
+        rest = jax.tree.map(lambda v: v[1:], micro)
+        (loss, metrics), grads = vag(params, cfg, first)
+
+        def body(carry, mb):
+            l_a, m_a, g_a = carry
+            (l, m), g = vag(params, cfg, mb)
+            return (l_a + l, jax.tree.map(jnp.add, m_a, m),
+                    jax.tree.map(jnp.add, g_a, g)), None
+
+        (loss, metrics, grads), _ = jax.lax.scan(
+            body, (loss, metrics, grads), rest)
+        inv = 1.0 / grad_accum
+        return (loss * inv, jax.tree.map(lambda v: v * inv, metrics),
+                jax.tree.map(lambda v: v * inv, grads))
 
     def local_step(params, flat_mu, flat_nu, ef, step, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            T.loss_fn, has_aux=True)(params, cfg, batch)
+        loss, metrics, grads = local_grads(params, batch)
         # report the GLOBAL mean loss (each rank saw its own micro-batch)
         loss = jax.lax.psum(loss, bsp.sync_axes) / world
         metrics = jax.tree.map(
             lambda v: jax.lax.psum(v, bsp.sync_axes) / world, metrics)
-        flat_g, unravel = ravel_pytree(
-            jax.tree.map(lambda g: g.astype(jnp.float32), grads))
-        n = flat_g.shape[0]
-        padded = _flat_len(grads, world, bsp.pad_align)
-        flat_g = jnp.concatenate(
-            [flat_g, jnp.zeros((padded - n,), jnp.float32)])
 
+        g_parts = engine.pack(jax.tree.leaves(grads), dtype=jnp.float32)
         if codec is not None and ef is not None:
-            flat_g, ef = error_feedback_step(flat_g, ef, codec)
+            # per-rank EF residual, bucket-ordered like the flat layout.
+            # The wire payload is the QUANTIZED corrected gradient —
+            # corrected − residual ≡ dequant(quant(corrected)) — so the
+            # residual compensates a quantization that actually reached the
+            # reduction (classic EF-SGD), not a hypothetical one.
+            new_ef = []
+            for bkt, part in zip(engine.buckets, g_parts):
+                res = jax.lax.dynamic_slice_in_dim(
+                    ef, bkt.offset, bkt.length)
+                corrected, res = error_feedback_step(part, res, codec)
+                g_parts[bkt.index] = corrected - res
+                new_ef.append(res)
+            ef = jnp.concatenate(new_ef)
 
-        # After recursive-halving RS, rank i holds the CONTIGUOUS chunk at
-        # bit-reversed position rev(i) (coarsest split decided by bit 0).
-        idx = C.flat_index(bsp.sync_axes)
-        L = int(math.log2(world))
-        rev = jnp.zeros((), jnp.int32)
-        for b in range(L):
-            rev = rev | (((idx >> b) & 1) << (L - 1 - b))
-        shard_len = padded // world
+        rev = C.bit_reversed_index(bsp.sync_axes, sizes)
+        p_parts = engine.pack(jax.tree.leaves(params), dtype=jnp.float32)
 
-        # --- communicate: fractal reduce-scatter (H-tree, halving) ---------
-        if bsp.schedule == "fractal":
-            g_shard = C.fractal_reduce_scatter(flat_g, bsp.sync_axes, sizes,)
-        else:
-            full = C.all_reduce(flat_g, bsp.schedule, bsp.sync_axes, sizes)
-            g_shard = jax.lax.dynamic_slice_in_dim(
-                full, rev * shard_len, shard_len)
-        g_shard = g_shard / world
+        # --- pipelined communicate/update/publish, one bucket at a time ----
+        new_p_parts, new_mu_parts, new_nu_parts, om = [], [], [], {}
+        for bkt, schedule, g_part, p_part, s_len, s_off in zip(
+                engine.buckets, engine.schedules, g_parts, p_parts,
+                shard_lens, shard_offs):
+            g_shard = engine.reduce_scatter_bucket(g_part, schedule) / world
+            p_shard = jax.lax.dynamic_slice_in_dim(
+                p_part, rev * s_len, s_len)
+            mu_b = jax.lax.dynamic_slice_in_dim(flat_mu, s_off, s_len)
+            nu_b = jax.lax.dynamic_slice_in_dim(flat_nu, s_off, s_len)
+            new_p, new_mu, new_nu, om = _adamw_flat(
+                p_shard, g_shard, mu_b, nu_b, step, acfg)
+            # publish: the all-gather inverts the bit-reversed scatter, so
+            # the bucket's flat layout comes back in original order
+            new_p_parts.append(engine.all_gather_bucket(new_p))
+            new_mu_parts.append(new_mu)
+            new_nu_parts.append(new_nu)
 
-        # --- ZeRO-1 update on this rank's flat shard ------------------------
-        flat_p, _ = ravel_pytree(
-            jax.tree.map(lambda p: p.astype(jnp.float32), params))
-        flat_p = jnp.concatenate(
-            [flat_p, jnp.zeros((padded - n,), jnp.float32)])
-        p_shard = jax.lax.dynamic_slice_in_dim(flat_p, rev * shard_len,
-                                               shard_len)
-        new_p, new_mu, new_nu, om = _adamw_flat(
-            p_shard, g_shard, flat_mu, flat_nu, step, acfg)
+        leaves = engine.unpack(new_p_parts, jax.tree.leaves(params))
+        params = jax.tree.unflatten(jax.tree.structure(params), leaves)
+        flat_mu = jnp.concatenate(new_mu_parts)
+        flat_nu = jnp.concatenate(new_nu_parts)
 
-        # --- publish: fractal all-gather of the updated shards -------------
-        # all-gather inverts the reduce-scatter placement, so the flat layout
-        # comes back in original order
-        flat_new = C.fractal_all_gather(new_p, bsp.sync_axes, sizes)
-        params = jax.tree.map(lambda x, ref: x.astype(ref.dtype),
-                              unravel(flat_new[:n]), params)
-
-        # --- fsync barrier closes the superstep -----------------------------
+        # --- fsync barrier closes the superstep ONCE ------------------------
         token = C.fractal_barrier(bsp.sync_axes, sizes, level=bsp.fsync_level)
         params = jax.tree.map(lambda x: barrier_tie(x, token), params)
         metrics = dict(metrics, loss=loss, **om)
-        return params, new_mu, new_nu, ef, step + 1, metrics
+        return params, flat_mu, flat_nu, ef, step + 1, metrics
 
     # --- shard_map plumbing: DP manual, model auto ---------------------------
     rep = jax.tree.map(lambda _: P(), pshape)       # DP-replicated params
@@ -254,7 +299,6 @@ def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
              "labels": P(bsp.sync_axes, None)}
     if cfg.frontend:
         bspec["frontend"] = P(bsp.sync_axes, None, None)
-    ef_spec = shard_spec if codec is not None else None
 
     in_specs = (rep, shard_spec, shard_spec,
                 shard_spec if codec is not None else P(),
@@ -274,13 +318,16 @@ def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
     step_fn = jax.jit(fn, donate_argnums=(1, 2))
 
     def init_state(params) -> Tuple:
-        shard_len = flat_total // world
         mu = jnp.zeros((flat_total,), jnp.float32)  # sharded by in_specs
         nu = jnp.zeros((flat_total,), jnp.float32)
-        ef = jnp.zeros((flat_total,), jnp.float32) if codec is not None \
+        # EF residual is PER-RANK state of full bucket-ordered length:
+        # global (world × flat_total) sharded over the sync axes
+        ef = jnp.zeros((world * flat_total,), jnp.float32) \
+            if codec is not None \
             else jnp.zeros((world,), jnp.float32)   # placeholder
         return params, mu, nu, ef, jnp.zeros((), jnp.int32)
 
+    init_state.superstep_layout = layout_tag
     return step_fn, init_state
 
 

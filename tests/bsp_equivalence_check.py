@@ -3,6 +3,9 @@
 Same model, same data, 3 steps on 8 devices: loss trajectories must agree to
 float tolerance — the H-tree schedule computes the same mean gradient as
 XLA's all-reduce, and the ZeRO-1 flat update must match the pytree AdamW.
+Also runs the BUCKETED pipelined superstep (tiny bucket_mb, per-bucket
+autotuned schedules, grad accumulation) against the same trajectory: the
+SuperstepEngine must be numerically equivalent to the monolithic path.
 Run as a subprocess by tests/test_system.py.
 """
 
@@ -59,9 +62,43 @@ def main():
         *state, m = stepB(*state, b)
         lossesB.append(float(np.asarray(m["loss"])))
 
-    print("xla    :", lossesA)
-    print("fractal:", lossesB)
+    # ---- Tier B, bucketed pipelined superstep (SuperstepEngine) ----
+    bspC = BSPConfig(sync_axes=("data",), schedule="auto", bucket_mb=0.25)
+    stepC, init_stateC = trainer.make_bsp_train_step(cfg, mesh, acfg, bspC)
+    stateC = init_stateC(params0)
+    lossesC = []
+    for b in batches(3):
+        *stateC, m = stepC(*stateC, b)
+        lossesC.append(float(np.asarray(m["loss"])))
+
+    # ---- gradient accumulation: accum=2 on 2×batch == monolithic on 2×batch
+    data16 = SyntheticLM(cfg, DataConfig(global_batch=16, seq_len=32, seed=7))
+    batches16 = [{k: jnp.asarray(v) for k, v in data16.batch(s).items()}
+                 for s in range(2)]
+    bspD = BSPConfig(sync_axes=("data",), schedule="fractal", bucket_mb=0.25)
+    stepD, init_stateD = trainer.make_bsp_train_step(cfg, mesh, acfg, bspD,
+                                                     grad_accum=2)
+    stateD = init_stateD(params0)
+    lossesD = []
+    for b in batches16:
+        *stateD, m = stepD(*stateD, b)
+        lossesD.append(float(np.asarray(m["loss"])))
+    bspE = BSPConfig(sync_axes=("data",), schedule="fractal")
+    stepE, init_stateE = trainer.make_bsp_train_step(cfg, mesh, acfg, bspE)
+    stateE = init_stateE(params0)
+    lossesE = []
+    for b in batches16:
+        *stateE, m = stepE(*stateE, b)
+        lossesE.append(float(np.asarray(m["loss"])))
+
+    print("xla       :", lossesA)
+    print("fractal   :", lossesB)
+    print("bucketed  :", lossesC)
+    print("bucket+ga2:", lossesD)
+    print("mono 2xB  :", lossesE)
     np.testing.assert_allclose(lossesA, lossesB, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(lossesB, lossesC, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(lossesE, lossesD, rtol=2e-4, atol=2e-4)
     print("EQUIVALENT")
 
 

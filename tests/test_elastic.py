@@ -1,0 +1,162 @@
+"""Elastic re-meshing: surviving_domain → ElasticPlan → re-mesh.
+
+The test ``runtime/elastic.py``'s docstring promises: after failures the
+recovery plan picks the largest complete fsync domain, shapes a new
+power-of-two mesh over the survivors, and raises gradient accumulation so
+the global batch is preserved — with the trainer's ``grad_accum`` path
+actually producing the same update as the unaccumulated step.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tree import FractalTree
+from repro.runtime.elastic import (ElasticPlan, build_mesh_from_tiles,
+                                   plan_recovery)
+from repro.runtime.fault_tolerance import surviving_domain
+
+
+# ---------------------------------------------------------------------------
+# surviving_domain: the structural recovery choice
+# ---------------------------------------------------------------------------
+
+
+def test_surviving_domain_no_failures_is_whole_tree():
+    tree = FractalTree((4, 4))
+    level, tiles = surviving_domain(tree, failed=[])
+    assert level == tree.num_levels
+    assert set(tiles) == set(tree.tiles())
+
+
+def test_surviving_domain_is_largest_clean_subtree():
+    tree = FractalTree((4, 4))
+    level, tiles = surviving_domain(tree, failed=[(0, 0)])
+    # one dead corner tile: the clean half of the mesh survives (8 tiles)
+    assert len(tiles) == 8
+    assert (0, 0) not in tiles
+    # and it IS a domain of the tree at that level
+    assert tuple(tiles) in tree.domains(level)
+
+
+def test_surviving_domain_single_survivor():
+    tree = FractalTree((2, 2))
+    alive = (1, 1)
+    failed = [t for t in tree.tiles() if t != alive]
+    level, tiles = surviving_domain(tree, failed)
+    assert level == 0 and tiles == (alive,)
+
+
+def test_surviving_domain_all_dead_raises():
+    tree = FractalTree((2, 2))
+    with pytest.raises(RuntimeError):
+        surviving_domain(tree, failed=list(tree.tiles()))
+
+
+# ---------------------------------------------------------------------------
+# plan_recovery: ElasticPlan geometry + batch preservation arithmetic
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape,failed,want_world,want_scale", [
+    ((2, 4), [(1, 1)], 4, 2),      # half the 8-mesh survives → accum ×2
+    ((4, 4), [(0, 0)], 8, 2),
+    ((4, 4), [(0, 0), (3, 3)], 4, 4),
+    ((2, 2), [(0, 1), (1, 0), (1, 1)], 1, 4),
+])
+def test_plan_recovery_preserves_global_batch(shape, failed, want_world,
+                                              want_scale):
+    tree = FractalTree(shape)
+    plan = plan_recovery(tree, failed)
+    assert isinstance(plan, ElasticPlan)
+    assert plan.world == want_world == len(plan.tiles)
+    assert plan.grad_accum_scale == want_scale
+    # the invariant the scale exists for: survivors × accumulation == the
+    # old world's total micro-batch slots, so the global batch is unchanged
+    assert plan.world * plan.grad_accum_scale == tree.num_tiles
+    # new mesh is a power-of-two factorization of the surviving world
+    rows, cols = plan.mesh_shape
+    assert rows * cols == plan.world
+    assert (rows & (rows - 1)) == 0 and (cols & (cols - 1)) == 0
+
+
+def test_plan_recovery_mesh_shape_squareish():
+    tree = FractalTree((4, 4))
+    plan = plan_recovery(tree, [])
+    assert plan.mesh_shape == (4, 4)
+    assert plan.grad_accum_scale == 1
+
+
+# ---------------------------------------------------------------------------
+# re-mesh over the survivors (host devices)
+# ---------------------------------------------------------------------------
+
+
+def test_build_mesh_from_tiles_single_survivor():
+    tree = FractalTree((2, 2))
+    alive = (1, 0)
+    flat = alive[0] * 2 + alive[1]
+    devices = [None] * tree.num_tiles
+    devices[flat] = jax.devices()[0]
+    mesh = build_mesh_from_tiles(tree, (alive,), devices=devices)
+    assert mesh.devices.shape == (1, 1)
+    assert mesh.devices[0, 0] == jax.devices()[0]
+    assert mesh.axis_names == ("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# grad_accum end to end: the trainer knob the plan scales
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_trainer_grad_accum_matches_unaccumulated():
+    """ElasticPlan.grad_accum_scale feeds make_bsp_train_step(grad_accum=·):
+    on the surviving world, accumulating K micro-batches must equal one
+    step on the same K×batch — the property that preserves the global
+    batch through a re-mesh."""
+    from repro.core.bsp import BSPConfig
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models import transformer as T
+    from repro.models.registry import get_config
+    from repro.optim import adamw
+    from repro.runtime import trainer
+
+    cfg = get_config("qwen2.5-3b-smoke")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    acfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10,
+                             grad_clip=0.0)
+    data = SyntheticLM(cfg, DataConfig(global_batch=4, seq_len=32, seed=1))
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    params0 = T.init_params(cfg, jax.random.key(0))
+    bsp = BSPConfig(sync_axes=("data",), schedule="fractal")
+
+    losses = {}
+    for accum in (1, 2, 4):
+        step_fn, init_state = trainer.make_bsp_train_step(
+            cfg, mesh, acfg, bsp, grad_accum=accum)
+        state = init_state(params0)
+        *state, m = step_fn(*state, batch)
+        *state, m2 = step_fn(*state, batch)
+        losses[accum] = (float(np.asarray(m["loss"])),
+                         float(np.asarray(m2["loss"])))
+    np.testing.assert_allclose(losses[1], losses[2], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(losses[1], losses[4], rtol=1e-5, atol=1e-5)
+
+
+def test_trainer_rejects_bad_grad_accum():
+    from repro.core.bsp import BSPConfig
+    from repro.models.registry import get_config
+    from repro.optim import adamw
+    from repro.runtime import trainer
+
+    cfg = get_config("qwen2.5-3b-smoke")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    acfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    with pytest.raises(ValueError):
+        trainer.make_bsp_train_step(cfg, mesh, acfg,
+                                    BSPConfig(sync_axes=("data",)),
+                                    grad_accum=0)

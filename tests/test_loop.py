@@ -1,0 +1,72 @@
+"""TrainLoop per-rank duration recording → StragglerTracker rebalancing.
+
+The loop used to record every superstep under rank 0, so the tracker
+could never see a straggler on >1 rank.  Now per-rank durations come from
+step metrics when the runner provides them (``per_rank_step_s``), with
+this host's wall clock under its own rank as the fallback.
+"""
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.registry import get_config
+from repro.runtime.loop import LoopConfig, TrainLoop
+
+
+def _data():
+    return SyntheticLM(get_config("qwen2.5-3b-smoke"),
+                       DataConfig(global_batch=2, seq_len=8, seed=0))
+
+
+def _loop(step_fn, total_steps=6, **cfg_kw):
+    return TrainLoop(step_fn=step_fn, state=(np.zeros(1),), data=_data(),
+                     cfg=LoopConfig(total_steps=total_steps, log_every=0,
+                                    **cfg_kw))
+
+
+def test_per_rank_metrics_feed_straggler_tracker():
+    world = 4
+
+    def step_fn(state, batch):
+        # rank 3 is 4× slower than everyone else
+        per_rank = np.array([0.1, 0.1, 0.1, 0.4], np.float32)
+        return state, {"loss": np.float32(1.0), "per_rank_step_s": per_rank}
+
+    loop = _loop(step_fn)
+    loop.run()
+    assert sorted(loop.stragglers.durations) == list(range(world))
+    assert loop.stragglers.stragglers() == {3}
+    # and the proportional rebalance takes micro-batches away from rank 3
+    shares = loop.stragglers.rebalanced_shares(list(range(world)), 8)
+    assert sum(shares.values()) == 8
+    assert shares[3] == min(shares.values()) < max(shares.values())
+
+
+def test_rebalance_hint_is_surfaced():
+    def step_fn(state, batch):
+        per_rank = np.array([0.1, 0.5], np.float32)
+        return state, {"loss": np.float32(1.0), "per_rank_step_s": per_rank}
+
+    loop = _loop(step_fn, rebalance_microbatches=4)
+    out = loop.run()
+    hints = loop.rebalance_history
+    assert hints, "straggler rebalance should be recorded"
+    assert out["rebalance"] == hints
+    assert hints[-1]["stragglers"] == [1]
+    assert sum(hints[-1]["shares"].values()) == 4
+    assert hints[-1]["shares"][1] < hints[-1]["shares"][0]
+    # the loss history stays homogeneous: every entry indexes by "loss"
+    assert all("loss" in h for h in loop.history)
+
+
+def test_wall_clock_fallback_records_this_hosts_rank():
+    def step_fn(state, batch):
+        return state, {"loss": np.float32(2.0)}
+
+    loop = _loop(step_fn, total_steps=3)
+    loop.host_rank = 2
+    loop.run()
+    assert list(loop.stragglers.durations) == [2]
+    assert len(loop.stragglers.durations[2]) == 3
+    # a single rank can never be flagged against itself
+    assert loop.stragglers.stragglers() == set()

@@ -1,0 +1,294 @@
+"""SuperstepEngine unit + property tests (host-side; single device).
+
+Bucket partitioning invariants, flat-layout round-trips, per-bucket
+autotuning, the overlap-aware cost model, and the pipelined NoC replay.
+Multi-device numerics (bucketed sync ≡ monolithic sync on a 16-device
+mesh) live in ``tests/superstep_checks.py`` (subprocess, marked slow).
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model as CM, schedule_ir as IR
+from repro.core import superstep as SS
+from repro.core.bsp import BSPConfig
+from repro.core.simulator import pipelined_on_noc, schedule_on_noc
+
+leaf_sizes_st = st.lists(st.integers(1, 5000), min_size=1, max_size=24)
+
+
+# ---------------------------------------------------------------------------
+# bucket partition invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(leaf_sizes_st, st.sampled_from([None, 1000, 4000, 10**7]),
+       st.sampled_from([128, 512]))
+def test_partition_covers_all_leaves_in_reverse_order(sizes, bound, unit):
+    order = tuple(reversed(range(len(sizes))))
+    buckets = SS.partition_buckets(sizes, order, bound, unit)
+    seen = [i for b in buckets for i in b.leaf_ids]
+    assert seen == list(order), "reverse-layer order, every leaf exactly once"
+    for b in buckets:
+        assert b.raw == sum(sizes[i] for i in b.leaf_ids)
+        assert b.length % unit == 0 and b.length >= b.raw
+        assert b.length - b.raw < unit, "minimal padding"
+    offs = [b.offset for b in buckets]
+    assert offs == sorted(offs) and offs[0] == 0
+    for a, b in zip(buckets, buckets[1:]):
+        assert b.offset == a.offset + a.length, "segments are contiguous"
+
+
+@settings(max_examples=40, deadline=None)
+@given(leaf_sizes_st, st.integers(1, 20000))
+def test_partition_respects_size_bound(sizes, bound):
+    order = tuple(reversed(range(len(sizes))))
+    buckets = SS.partition_buckets(sizes, order, bound, 1)
+    for b in buckets:
+        # a bucket only exceeds the bound when a single leaf does
+        assert b.raw <= bound or len(b.leaf_ids) == 1 or \
+            b.raw - sizes[b.leaf_ids[-1]] <= bound
+
+
+def test_partition_none_bound_is_single_bucket():
+    buckets = SS.partition_buckets([5, 6, 7], (2, 1, 0), None, 4)
+    assert len(buckets) == 1 and buckets[0].leaf_ids == (2, 1, 0)
+
+
+# ---------------------------------------------------------------------------
+# engine plan + flat-layout round trip (world=1: no collectives needed)
+# ---------------------------------------------------------------------------
+
+
+def _engine(specs, **cfg_kw):
+    cfg = BSPConfig(schedule=cfg_kw.pop("schedule", "fractal"), **cfg_kw)
+    return SS.SuperstepEngine(specs, cfg, (1,))
+
+
+@settings(max_examples=25, deadline=None)
+@given(leaf_sizes_st, st.sampled_from([None, 0.001, 0.01]))
+def test_pack_unpack_roundtrip_ragged(sizes, bucket_mb):
+    rng = np.random.default_rng(42)
+    leaves = [jnp.asarray(rng.normal(size=(s,)).astype(np.float32))
+              for s in sizes]
+    specs = SS.leaf_specs_of(leaves)
+    eng = _engine(specs, bucket_mb=bucket_mb, pad_align=8)
+    parts = eng.pack(leaves)
+    assert [p.shape[0] for p in parts] == [b.length for b in eng.buckets]
+    out = eng.unpack(parts, leaves)
+    for a, b in zip(leaves, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_unpack_restores_shapes_and_dtypes():
+    leaves = [jnp.ones((3, 5), jnp.bfloat16), jnp.zeros((7,), jnp.float32)]
+    eng = _engine(SS.leaf_specs_of(leaves), bucket_mb=None, pad_align=4)
+    out = eng.unpack(eng.pack(leaves), leaves)
+    assert out[0].shape == (3, 5) and out[0].dtype == jnp.bfloat16
+    assert out[1].shape == (7,) and out[1].dtype == jnp.float32
+
+
+def test_overlap_false_collapses_to_single_bucket():
+    specs = tuple(SS.LeafSpec((1000,), "float32") for _ in range(8))
+    cfg = BSPConfig(schedule="fractal", bucket_mb=0.001, overlap=False)
+    eng = SS.SuperstepEngine(specs, cfg, (2, 2))
+    assert eng.n_buckets == 1
+    cfg_on = BSPConfig(schedule="fractal", bucket_mb=0.001, overlap=True)
+    assert SS.SuperstepEngine(specs, cfg_on, (2, 2)).n_buckets > 1
+
+
+def test_engine_programs_carry_bucket_metadata():
+    specs = tuple(SS.LeafSpec((4000,), "float32") for _ in range(6))
+    cfg = BSPConfig(schedule="auto", bucket_mb=0.02)
+    eng = SS.SuperstepEngine(specs, cfg, (2, 2))
+    progs = eng.programs()
+    assert len(progs) == eng.n_buckets > 1
+    for i, (p, b) in enumerate(zip(progs, eng.buckets)):
+        assert p.bucket == b.meta(eng.n_buckets)
+        assert p.bucket.index == i
+        assert p.name in IR.SCHEDULES
+    # bucket metadata survives describe() and _replace_name
+    assert "bucket 0/" in progs[0].describe()
+    assert progs[0]._replace_name("x").bucket == progs[0].bucket
+
+
+def test_shard_offsets_partition_the_rank_shard():
+    specs = tuple(SS.LeafSpec((3000,), "float32") for _ in range(5))
+    cfg = BSPConfig(schedule="fractal", bucket_mb=0.01)
+    eng = SS.SuperstepEngine(specs, cfg, (4,))
+    offs = eng.shard_offsets()
+    lens = [eng.shard_len(b) for b in eng.buckets]
+    assert offs[0] == 0
+    assert all(offs[i + 1] == offs[i] + lens[i] for i in range(len(lens) - 1))
+    assert offs[-1] + lens[-1] == eng.total_padded // 4
+
+
+def test_auto_schedule_is_picked_per_bucket():
+    # one tiny + one huge bucket on a 4×4 mesh must split fractal/ring,
+    # matching the schedule_matrix crossover
+    specs = (SS.LeafSpec((10_000_000,), "float32"),
+             SS.LeafSpec((32,), "float32"))
+    cfg = BSPConfig(schedule="auto", bucket_mb=1.0)
+    eng = SS.SuperstepEngine(specs, cfg, (4, 4))
+    assert eng.n_buckets == 2
+    # bucket 0 is the reverse-order head: the tiny leaf
+    assert eng.schedules[0] == "fractal"
+    assert eng.schedules[1] == "ring"
+
+
+def test_engine_cache_reuses_plan():
+    cfg = BSPConfig(schedule="fractal", bucket_mb=0.1)
+    tree = {"a": jnp.zeros((100,)), "b": jnp.zeros((7, 3))}
+    e1 = SS.engine_for(tree, cfg, (2, 2))
+    e2 = SS.engine_for({"a": jnp.ones((100,)), "b": jnp.ones((7, 3))},
+                       cfg, (2, 2))
+    assert e1 is e2
+
+
+def test_world_one_sync_is_identity():
+    cfg = BSPConfig(schedule="fractal")
+    tree = {"w": jnp.arange(8.0)}
+    eng = SS.engine_for(tree, cfg, (1,))
+    out = eng.sync(tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(8.0))
+
+
+# ---------------------------------------------------------------------------
+# overlap-aware cost model
+# ---------------------------------------------------------------------------
+
+
+def _progs(n, shape=(4, 4), name="fractal"):
+    return [IR.build_program(name, shape) for _ in range(n)]
+
+
+def test_overlap_never_beats_physics_and_never_loses_to_serial():
+    progs = _progs(4)
+    vols = [1e6, 2e6, 4e6, 8e6]
+    ready = [1e-4, 2e-4, 3e-4, 4e-4]
+    tl = CM.overlap_step_cost(progs, vols, ready, CM.TPU_V5E_ICI)
+    assert tl.overlapped_s <= tl.serial_s
+    # lower bounds: last ready time, and total fabric occupancy
+    assert tl.overlapped_s >= max(ready)
+    assert tl.overlapped_s >= sum(tl.comm_cost_s)
+    for r, s, e, c in zip(tl.ready_s, tl.comm_start_s, tl.comm_end_s,
+                          tl.comm_cost_s):
+        assert s >= r and e == pytest.approx(s + c)
+
+
+def test_overlap_equals_serial_when_nothing_ready_early():
+    progs = _progs(3)
+    vols = [1e6] * 3
+    ready = [5e-3] * 3   # everything ready at backward end: no overlap
+    tl = CM.overlap_step_cost(progs, vols, ready, CM.TPU_V5E_ICI)
+    assert tl.overlapped_s == pytest.approx(tl.serial_s)
+    assert tl.overlap_gain == pytest.approx(0.0)
+
+
+def test_overlap_strictly_wins_with_early_buckets():
+    progs = _progs(2)
+    vols = [8e6, 8e6]
+    ready = [0.0, 1e-3]          # bucket 0 ready immediately
+    tl = CM.overlap_step_cost(progs, vols, ready, CM.TPU_V5E_ICI)
+    assert tl.overlapped_s < tl.serial_s
+    assert tl.overlap_gain > 0
+
+
+def test_engine_timeline_monotone_ready_and_matches_program_costs():
+    specs = tuple(SS.LeafSpec((50_000,), "float32") for _ in range(10))
+    cfg = BSPConfig(schedule="fractal", bucket_mb=0.4)
+    eng = SS.SuperstepEngine(specs, cfg, (4, 4))
+    tl = eng.timeline(backward_s=1e-3)
+    assert list(tl.ready_s) == sorted(tl.ready_s)
+    assert tl.ready_s[-1] == pytest.approx(1e-3)
+    assert len(tl.comm_cost_s) == eng.n_buckets
+
+
+# ---------------------------------------------------------------------------
+# pipelined NoC replay
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_single_program_matches_schedule_on_noc():
+    for name in ("fractal", "ring", "xy", "naive"):
+        prog = IR.build_program(name, (2, 4))
+        a = schedule_on_noc(prog, payload_flits=32)
+        b = pipelined_on_noc([prog], payload_flits=[32], ready=[0])
+        assert a.overhead == b.overhead, name
+        assert a.total_msgs == b.total_msgs
+
+
+def test_pipelined_ready_gating_delays_later_buckets():
+    prog = IR.build_program("fractal", (4, 4))
+    solo = schedule_on_noc(prog, payload_flits=16).overhead
+    gap = 10 * solo
+    pipe = pipelined_on_noc([prog, prog], payload_flits=[16, 16],
+                            ready=[0, gap])
+    # far-apart ready times: no contention between buckets, second one
+    # simply starts at its gate
+    assert pipe.program_finish[0] <= gap
+    assert pipe.program_finish[1] >= gap
+    assert pipe.overhead >= gap
+
+
+def test_pipelined_overlap_beats_serial_sum():
+    progs = [IR.build_program("fractal", (4, 4)) for _ in range(3)]
+    flits = [64, 64, 64]
+    serial = sum(schedule_on_noc(p, payload_flits=f).overhead
+                 for p, f in zip(progs, flits))
+    ready = [serial // 3, 2 * serial // 3, serial]
+    pipe = pipelined_on_noc(progs, payload_flits=flits, ready=ready)
+    assert pipe.overhead < max(ready) + serial
+    assert len(pipe.program_finish) == 3
+    assert list(pipe.program_finish) == sorted(pipe.program_finish)
+
+
+def test_pipelined_shape_mismatch_rejected():
+    a = IR.build_program("fractal", (2, 2))
+    b = IR.build_program("fractal", (4, 4))
+    with pytest.raises(ValueError):
+        pipelined_on_noc([a, b])
+    with pytest.raises(ValueError):
+        pipelined_on_noc([])
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_mb_must_be_positive():
+    with pytest.raises(ValueError):
+        BSPConfig(bucket_mb=0.0)
+    with pytest.raises(ValueError):
+        BSPConfig(bucket_mb=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# multi-device numerics (16 host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_bucketed_numerics_subprocess():
+    """Bucketed pipelined sync ≡ monolithic sync: ragged pytrees, odd
+    bucket boundaries, every schedule and codec (see superstep_checks)."""
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(root / "tests" / "superstep_checks.py")],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "ALL OK" in proc.stdout

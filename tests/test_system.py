@@ -52,3 +52,18 @@ def test_serve_cli_runs():
     out = _run(["-m", "repro.launch.serve", "--arch", "gemma2-2b-smoke",
                 "--requests", "2", "--prompt-len", "8", "--gen", "4"])
     assert "decode" in out
+    assert "decoded=4" in out      # no eos configured: full wave
+
+
+@pytest.mark.slow
+def test_serve_cli_eos_early_exit():
+    # greedy decoding is deterministic: learn a token the wave emits, then
+    # re-run with it as EOS — the decode loop must stop early
+    out = _run(["-m", "repro.launch.serve", "--arch", "gemma2-2b-smoke",
+                "--requests", "1", "--prompt-len", "8", "--gen", "6"])
+    line = next(l for l in out.splitlines() if l.startswith("sample outputs"))
+    eos = eval(line.split(":", 1)[1])[0][1]    # second generated token
+    out = _run(["-m", "repro.launch.serve", "--arch", "gemma2-2b-smoke",
+                "--requests", "1", "--prompt-len", "8", "--gen", "6",
+                "--eos-id", str(eos)])
+    assert "early exit" in out and "decoded=2" in out
