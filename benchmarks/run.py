@@ -9,6 +9,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows.
              measured lowering; asserts the butterfly↔ring payload crossover
   overlap    bucketed-superstep sweep: bucket size × per-bucket schedule vs
              monolithic; asserts overlap-aware predicted time < serial sum
+  serve_bench  continuous-batching engine vs wave baseline on ragged output
+             lengths; asserts the occupancy + tokens/step win
   probes     XLA cost_analysis while-loop probe (motivates hlo_analysis)
   roofline   per-(arch×shape×mesh) roofline table from results/dryrun/*.json
 
@@ -27,7 +29,7 @@ if "XLA_FLAGS" not in os.environ or "device_count" not in os.environ.get(
                                + os.environ.get("XLA_FLAGS", ""))
 
 BENCHES = ("table1", "area", "scaling", "schedules", "schedule_matrix",
-           "overlap", "probes", "roofline")
+           "overlap", "serve_bench", "probes", "roofline")
 
 
 def main(argv=None) -> None:

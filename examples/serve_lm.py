@@ -1,11 +1,12 @@
-"""Serve a small model with batched requests (deliverable b, serving kind).
+"""Serve a small model under continuous batching (deliverable b, serving).
 
     PYTHONPATH=src python examples/serve_lm.py
 
-Thin wrapper over the production serving core (repro.launch.serve): admits a
-wave of 8 requests with ragged prompt lengths (padded to the wave max),
-prefills them batched, then decodes 24 tokens with greedy sampling,
-reporting per-phase token throughput.
+Thin wrapper over the production serving core (repro.launch.serve): a pool
+of 4 decode slots serves 8 requests arriving as a Poisson process; ragged
+generation budgets free slots at different times and the engine admits the
+next queued request into each freed slot (chunked prefill interleaved with
+decode).  Reports TTFT, tokens/step throughput and slot occupancy.
 """
 
 from repro.launch.serve import main as serve_main
@@ -17,6 +18,10 @@ def main():
         "--requests", "8",
         "--prompt-len", "24",
         "--gen", "24",
+        "--gen-spread", "16",
+        "--max-slots", "4",
+        "--prefill-chunk", "12",
+        "--arrival", "poisson:50",
         "--temperature", "0.0",
     ])
 

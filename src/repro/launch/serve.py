@@ -1,16 +1,19 @@
-"""Serving entry point: batched prefill + decode with continuous batching.
+"""Serving entry point: continuous-batching engine over a slot pool.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b-smoke \
-      --requests 8 --prompt-len 32 --gen 16 [--eos-id 2] [--devices 8]
+      --requests 8 --prompt-len 32 --gen 16 --max-slots 4 \
+      [--arrival poisson:50] [--eos-id 2] [--devices 8] [--mode wave]
 
-Implements a minimal production serving core:
-  * batched prefill (one jit'd call per admission wave),
-  * decode loop with a shared ring KV cache,
-  * greedy or temperature sampling,
-  * per-request completion bookkeeping with early wave exit: once every
-    request has emitted ``--eos-id`` (or hit ``--gen`` tokens) the decode
-    loop stops instead of decoding padding until the wave drains — slot
-    reuse/continuous admission is the documented extension point.
+Built on ``repro.serve``: a fixed pool of ``--max-slots`` decode slots over
+the shared ring KV cache; queued requests are admitted the moment EOS (or
+the per-request budget) frees a slot, with chunked prefill interleaved
+between decode steps.  Reports per-request TTFT, per-step throughput and
+slot occupancy.  ``--mode wave`` runs the old wave-at-a-time loop for A/B
+comparison (see ``benchmarks/serve_bench.py``).
+
+  --arrival immediate | poisson:RATE | trace:SPEC   synthetic arrivals
+  --gen-spread K        ragged output budgets: gen drawn from [gen-K, gen]
+  --max-slots S         decode slot pool size (shards over --devices)
 """
 
 import argparse
@@ -22,11 +25,20 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16,
+                    help="per-request generation budget (first token incl.)")
+    ap.add_argument("--gen-spread", type=int, default=0,
+                    help="ragged budgets: draw from [gen-K, gen] per request")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--eos-id", type=int, default=None,
-                    help="token id that completes a request; the decode "
-                         "loop exits early once every request emitted it")
+                    help="token id that completes a request and frees its "
+                         "slot for the next admission")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--arrival", default="immediate",
+                    help="immediate | poisson:RATE | trace:SPEC")
+    ap.add_argument("--mode", choices=("continuous", "wave"),
+                    default="continuous")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -36,84 +48,62 @@ def main(argv=None):
             f"--xla_force_host_platform_device_count={args.devices} "
             + os.environ.get("XLA_FLAGS", ""))
 
-    import time
-
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
     from repro.launch.mesh import make_mesh
     from repro.models import transformer as T
     from repro.models.registry import get_config
+    from repro.serve import (EngineConfig, Request, ServeEngine,
+                             parse_arrival_spec, serve_waves)
 
     cfg = get_config(args.arch)
-    key = jax.random.key(args.seed)
-    params = T.init_params(cfg, key)
-    B = args.requests
-    max_len = args.prompt_len + args.gen + cfg.frontend_tokens
+    params = T.init_params(cfg, jax.random.key(args.seed))
 
     rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab_size, size=(B, args.prompt_len),
-                           dtype=np.int32)
-    frontend = None
-    if cfg.frontend:
-        frontend = jnp.asarray(rng.standard_normal(
-            (B, cfg.frontend_tokens, cfg.frontend_dim)).astype(np.float32))
+    arrivals = parse_arrival_spec(args.arrival, args.requests, args.seed)
+    requests = []
+    for i in range(args.requests):
+        gen = args.gen if args.gen_spread <= 0 else int(
+            rng.integers(max(1, args.gen - args.gen_spread), args.gen + 1))
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=(args.prompt_len,)).tolist()
+        requests.append(Request(req_id=i, prompt=prompt, max_new_tokens=gen,
+                                arrival_s=arrivals[i]))
 
-    cache = T.init_cache(cfg, B, max_len)
-    prefill = jax.jit(lambda p, t, c, f: T.prefill(p, cfg, t, c, f))
-    decode = jax.jit(lambda p, t, c, o: T.decode_step(p, cfg, t, c, o))
+    ecfg = EngineConfig(
+        max_slots=args.max_slots,
+        max_len=args.prompt_len + args.gen + 1,
+        prefill_chunk=args.prefill_chunk,
+        temperature=args.temperature,
+        eos_id=args.eos_id,
+        seed=args.seed)
 
-    t0 = time.monotonic()
-    logits, cache, offset = prefill(params, jnp.asarray(prompts), cache,
-                                    frontend)
-    jax.block_until_ready(logits)
-    t_prefill = time.monotonic() - t0
+    mesh = None
+    if args.devices:
+        if args.mode == "wave":
+            print(f"note: --devices {args.devices} ignored in wave mode "
+                  "(the baseline runs unsharded)")
+        else:
+            mesh = make_mesh((args.devices,), ("data",))
 
-    def sample(key, logits):
-        if args.temperature <= 0:
-            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits[:, -1] / args.temperature).astype(jnp.int32)
+    print(f"arch={cfg.name} mode={args.mode} requests={args.requests} "
+          f"prompt={args.prompt_len} gen={args.gen}"
+          f"{f'±{args.gen_spread}' if args.gen_spread else ''} "
+          f"slots={args.max_slots} arrival={args.arrival}"
+          + (f" devices={args.devices}" if args.devices else ""))
 
-    toks = []
-    tok = sample(key, logits)[:, None]
-    done = np.zeros((B,), dtype=bool)      # requests that have emitted EOS
-    n_decodes = 0                          # decode() calls actually made
-    t0 = time.monotonic()
-    for i in range(args.gen):
-        host_tok = np.asarray(tok)
-        toks.append(host_tok)
-        if args.eos_id is not None:
-            done |= host_tok[:, 0] == args.eos_id
-            if done.all():
-                # every request in the wave finished: stop decoding instead
-                # of burning steps on padding until the wave drains
-                break
-        if i == args.gen - 1:
-            break                          # last sampled token already kept
-        logits, cache = decode(params, tok, cache, offset + i)
-        n_decodes += 1
-        key, sub = jax.random.split(key)
-        tok = sample(sub, logits)[:, None]
-    jax.block_until_ready(tok)
-    t_decode = time.monotonic() - t0
+    if args.mode == "wave":
+        results, metrics = serve_waves(cfg, params, ecfg, requests)
+    else:
+        engine = ServeEngine(cfg, params, ecfg, mesh=mesh)
+        results = engine.run(requests)
+        metrics = engine.metrics
 
-    gen = np.concatenate(toks, axis=1)
-    n_steps = gen.shape[1]
-    print(f"arch={cfg.name} requests={B} prompt={args.prompt_len} "
-          f"gen={args.gen} decoded={n_steps}"
-          + (f" (early exit: all {B} requests hit eos={args.eos_id})"
-             if n_steps < args.gen else ""))
-    print(f"prefill: {t_prefill*1e3:8.1f} ms "
-          f"({B*args.prompt_len/max(t_prefill,1e-9):9.0f} tok/s)")
-    # throughput over the decode calls that ran (the first token of the
-    # wave comes from prefill's logits, not a decode step)
-    dec_rate = B * n_decodes / max(t_decode, 1e-9) if n_decodes else 0.0
-    print(f"decode : {t_decode*1e3:8.1f} ms "
-          f"({dec_rate:9.0f} tok/s over {n_decodes} steps)")
-    print("sample outputs:", gen[:2, :8].tolist())
-    return gen
+    print(metrics.report())
+    shown = sorted(results)[:2]
+    print("sample outputs:", [results[i][:8] for i in shown])
+    return results, metrics
 
 
 if __name__ == "__main__":

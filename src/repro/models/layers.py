@@ -237,20 +237,31 @@ def gqa_attention(q, k, v, *, pos_q, pos_k, causal=True, window=None,
 def _cache_update(buf, new, offset):
     """Write ``new`` [B,T,...] into cache ``buf`` [B,S,...] at ``offset``.
 
+    ``offset`` is a scalar (shared write position) or, for T == 1 decode, a
+    per-row [B] vector — the serve engine's slots sit at independent
+    sequence lengths inside one batched decode step.
+
     * T == S (prefill filling the whole cache): replace outright;
     * T == 1 (decode): one-hot select over S — shard-local under an
       S-over-"model" layout, unlike dynamic-update-slice whose GSPMD
       lowering materializes [S_local × S] masks;
-    * general T: dynamic_update_slice (training never caches).
+    * general T: dynamic_update_slice (chunked prefill; scalar offset only).
     """
     S = buf.shape[1]
     T = new.shape[1]
     if T == S:
         return new.astype(buf.dtype)
+    off = jnp.asarray(offset)
     if T == 1:
-        hit = (jnp.arange(S, dtype=jnp.int32) == offset)
-        hit = hit.reshape((1, S) + (1,) * (buf.ndim - 2))
+        if off.ndim == 1:      # per-slot write positions
+            hit = jnp.arange(S, dtype=jnp.int32)[None, :] == off[:, None]
+            hit = hit.reshape((off.shape[0], S) + (1,) * (buf.ndim - 2))
+        else:
+            hit = (jnp.arange(S, dtype=jnp.int32) == off)
+            hit = hit.reshape((1, S) + (1,) * (buf.ndim - 2))
         return jnp.where(hit, new.astype(buf.dtype), buf)
+    if off.ndim != 0:
+        raise ValueError("multi-token cache writes need a scalar offset")
     return lax.dynamic_update_slice_in_dim(buf, new.astype(buf.dtype),
                                            offset, axis=1)
 
@@ -425,7 +436,8 @@ def _mla_absorbed_decode(p, cfg, q_nope, q_rope, c_kv, k_rope, offset):
                        k_rope[:, :, 0]).astype(jnp.float32)
     s = s / math.sqrt(dn + m.qk_rope_head_dim)
     s = ACT.scores_sshard(s)
-    valid = jnp.arange(S, dtype=jnp.int32)[None, None, None, :] <= offset
+    off = jnp.asarray(offset).reshape((-1, 1, 1, 1))   # scalar or per-slot [B]
+    valid = jnp.arange(S, dtype=jnp.int32)[None, None, None, :] <= off
     s = jnp.where(valid, s, -1e30)
     prob = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhts,bsr->bthr", prob.astype(c_kv.dtype), c_kv)

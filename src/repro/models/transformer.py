@@ -420,12 +420,82 @@ def prefill(params, cfg: ArchConfig, tokens, cache, frontend_embeds=None):
 
 
 def decode_step(params, cfg: ArchConfig, token, cache, offset):
-    """token: [B,1] ints; offset: scalar tokens-already-cached."""
+    """token: [B,1] ints; offset: tokens-already-cached — a scalar shared by
+    the batch, or a per-row [B] vector (serve slots at independent lengths
+    inside one batched decode step)."""
     B = token.shape[0]
-    positions = jnp.broadcast_to(jnp.asarray(offset)[None, None],
-                                 (B, 1)).astype(jnp.int32)
+    off = jnp.asarray(offset)
+    if off.ndim == 1:
+        positions = off[:, None].astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(off[None, None], (B, 1)).astype(jnp.int32)
     h = _embed(params, cfg, token, positions=positions)
     h, new_caches, _ = _run_segments(params, cfg, h, positions=positions,
                                      caches=cache, offset=offset)
     h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
     return _head(params, cfg, h), new_caches
+
+
+def prefill_chunk(params, cfg: ArchConfig, tokens, cache, offset,
+                  with_logits: bool = True):
+    """Write a prompt chunk at cache positions [offset, offset+T).
+
+    The serve engine's chunked-admission primitive: a fixed-shape [B,T]
+    chunk lands at a (traced) scalar ``offset``, so arbitrary prompt
+    lengths stream through one compiled function.  Returns logits for the
+    WHOLE chunk [B,T,V] (the engine picks the real last position — the tail
+    chunk is right-padded) and the updated cache.  Interior chunks only
+    feed the cache: pass ``with_logits=False`` (a Python-level switch —
+    compile one variant per value) to skip the full-vocab head projection,
+    the dominant FLOPs at production vocab sizes; logits come back None.
+    Positional caches (attention / MLA) only: recurrent caches would
+    advance on padding.
+    """
+    B, T = tokens.shape
+    if T >= L.QUERY_CHUNK_THRESHOLD:
+        # the blocked-attention path (chunk_q) computes STATIC per-block key
+        # extents assuming positions start at 0 — at a nonzero cache offset
+        # it would silently mask out the causally-visible prefix
+        raise ValueError(
+            f"prefill chunk length {T} >= {L.QUERY_CHUNK_THRESHOLD}: "
+            "offset prefill must stay below the blocked-attention "
+            "threshold — use smaller chunks")
+    off = jnp.asarray(offset, jnp.int32)
+    positions = (off + jnp.arange(T, dtype=jnp.int32))[None, :]
+    positions = jnp.broadcast_to(positions, (B, T))
+    h = _embed(params, cfg, tokens, positions=positions)
+    h, new_caches, _ = _run_segments(params, cfg, h, positions=positions,
+                                     caches=cache, offset=off)
+    if not with_logits:
+        return None, new_caches
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    return _head(params, cfg, h), new_caches
+
+
+# ---------------------------------------------------------------------------
+# per-slot cache surgery (serve engine)
+# ---------------------------------------------------------------------------
+#
+# Cache leaves are stacked per segment as [reps, B, ...]: axis 1 is the
+# batch/slot dim.  These three ops are the whole slot-reuse cache API —
+# admission takes a slot view, prefills it, writes it back; completion
+# resets the slot.  All accept a traced slot index (jit-stable).
+
+
+def take_slot(cache, slot):
+    """Extract one slot's cache as a batch-1 view (leaf [reps, 1, ...])."""
+    return jax.tree.map(
+        lambda x: lax.dynamic_slice_in_dim(x, slot, 1, axis=1), cache)
+
+
+def write_slot(cache, sub, slot):
+    """Write a batch-1 slot cache (from ``take_slot``) back at ``slot``."""
+    return jax.tree.map(
+        lambda x, s: lax.dynamic_update_slice_in_dim(
+            x, s.astype(x.dtype), slot, axis=1), cache, sub)
+
+
+def reset_slot(cache, slot):
+    """Zero one slot's rows in every cache leaf, other slots untouched."""
+    return jax.tree.map(lambda x: x.at[:, slot].set(jnp.zeros((), x.dtype)),
+                        cache)

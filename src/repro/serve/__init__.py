@@ -1,0 +1,18 @@
+"""Continuous-batching serve subsystem.
+
+A fixed pool of decode slots over the shared ring KV cache; queued requests
+are admitted into slots the moment EOS (or the per-request token budget)
+frees them, with chunked prefill interleaved between decode steps.
+
+  engine.ServeEngine    the continuous-batching core (jit-stable decode)
+  engine.serve_waves    the wave-at-a-time baseline (for A/B benchmarks)
+  slots.SlotTable       host-side slot bookkeeping mirroring device state
+  queue.RequestQueue    arrival-time-gated admission queue + generators
+  metrics.ServeMetrics  per-request TTFT, per-step throughput, occupancy
+"""
+
+from .engine import EngineConfig, ServeEngine, serve_waves  # noqa: F401
+from .metrics import ServeMetrics  # noqa: F401
+from .queue import (Request, RequestQueue, poisson_arrivals,  # noqa: F401
+                    parse_arrival_spec, trace_arrivals)
+from .slots import SlotTable  # noqa: F401

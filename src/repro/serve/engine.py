@@ -1,0 +1,394 @@
+"""Continuous-batching serve engine with slot-level admission.
+
+The wave-based loop this replaces admitted B requests, decoded until the
+whole wave drained, and only then admitted again — freed slots idled behind
+the wave's straggler.  Here a fixed pool of ``max_slots`` decode slots runs
+over one shared ring KV cache (the slot index IS the cache batch row) and a
+queued request is admitted the moment EOS or the per-request budget frees a
+slot:
+
+  * **jit-stable decode**: every decode step is one compiled call over the
+    full [S] slot batch — fixed slot count, per-slot cache offsets (the
+    vector-``offset`` form of ``transformer.decode_step``), inactive rows
+    masked by writing to the cache sentinel position the causal mask hides.
+    Slot churn never recompiles anything.
+  * **chunked admission prefill**: prompts stream through one compiled
+    [1, prefill_chunk] function (``transformer.prefill_chunk``) into the
+    admitted slot's cache row, interleaved between decode steps so ongoing
+    decodes keep making progress while newcomers prefill.
+  * **single RNG split discipline**: token t of request r is sampled with
+    ``fold_in(fold_in(seed_key, r), t)`` — including the FIRST token (the
+    wave-era loop sampled it from the unsplit top-level key).  Sampling is
+    deterministic per request, independent of slot assignment, admission
+    order, or pool size.
+  * **mesh composition**: given a 1-axis ("data",) mesh the slot batch dim
+    of the cache and every per-step input shards across devices; params are
+    replicated (serve-style), activations follow ``act_sharding``.
+
+``serve_waves`` keeps the old wave-at-a-time loop alive as the measured
+baseline for ``benchmarks/serve_bench.py``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.models.transformer import ATTN_KINDS, MLA_KINDS
+
+from .metrics import ServeMetrics
+from .queue import Request, RequestQueue
+from .slots import SlotTable
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Engine knobs (everything the serve CLI exposes lands here)."""
+
+    max_slots: int = 8
+    max_len: int = 256           # cache positions per slot (prompt + gen)
+    prefill_chunk: int = 16      # admission prefill chunk length
+    chunks_per_step: int = 1     # prefill chunks interleaved per decode step
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+def _check_arch(cfg: ArchConfig, *, allow_recurrent: bool = False) -> None:
+    """Slot reuse needs positional caches: a freed row is reclaimed by
+    masking, not by replaying state.  Recurrent caches (mamba/xlstm) would
+    advance on chunk padding and carry the evicted request's state — the
+    CONTINUOUS engine rejects them loudly rather than serving wrongly; the
+    wave baseline batch-prefills without chunk padding and may keep them
+    (``allow_recurrent=True``).  The frontend (prefix-image) path needs
+    per-request embeddings at admission: rejected in both modes (requests
+    are token-only)."""
+    if cfg.frontend:
+        raise ValueError(
+            f"{cfg.name}: frontend architectures are not servable "
+            "(requests are token-only)")
+    if allow_recurrent:
+        return
+    for unit, _reps in cfg.segments():
+        for kind in unit:
+            if kind not in ATTN_KINDS and kind not in MLA_KINDS:
+                raise ValueError(
+                    f"{cfg.name}: layer kind {kind!r} has a recurrent "
+                    "cache; the continuous engine supports attention/MLA "
+                    "architectures (--mode wave still serves it)")
+
+
+def _make_sampler(base_key, temperature: float):
+    """The single RNG split discipline both serving modes share: token t of
+    request r is drawn with ``fold_in(fold_in(base_key, r), t)``.  One
+    definition — the wave/continuous token-identity invariant (asserted in
+    ``benchmarks/serve_bench.py``) depends on the two modes never drifting.
+    """
+
+    def sample(logits, req_ids, tok_idx):
+        """logits [N,V] → tokens [N]."""
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def one(l, r, t):
+            k = jax.random.fold_in(jax.random.fold_in(base_key, r), t)
+            return jax.random.categorical(k, l / temperature).astype(
+                jnp.int32)
+
+        return jax.vmap(one)(logits, req_ids, tok_idx)
+
+    return sample
+
+
+class ServeEngine:
+    """Fixed slot pool + shared ring KV cache + admission queue."""
+
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig,
+                 mesh=None):
+        _check_arch(cfg)
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.mesh = mesh
+        if ecfg.chunks_per_step < 1:
+            raise ValueError("chunks_per_step must be >= 1")
+        if ecfg.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        # a padded chunk must fit the cache row (a clamped dynamic-slice
+        # write would silently shift over live positions)
+        self._chunk = min(ecfg.prefill_chunk, ecfg.max_len)
+        self.table = SlotTable(ecfg.max_slots, ecfg.max_len)
+        self.queue = RequestQueue()
+        self.metrics = ServeMetrics(max_slots=ecfg.max_slots)
+        self.results: Dict[int, List[int]] = {}
+        self._key = jax.random.key(ecfg.seed)
+
+        self._data_spec = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            if ecfg.max_slots % mesh.devices.size:
+                raise ValueError(
+                    f"--max-slots {ecfg.max_slots} must divide across "
+                    f"{mesh.devices.size} devices")
+            self._data_spec = lambda ndim: NamedSharding(
+                mesh, P("data", *([None] * (ndim - 1))))
+            replicated = NamedSharding(mesh, P())
+            params = jax.device_put(params, jax.tree.map(
+                lambda _: replicated, params))
+        self.params = params
+
+        cache = T.init_cache(cfg, ecfg.max_slots, ecfg.max_len)
+        if self._data_spec is not None:
+            # cache leaves are [reps, S, ...]: slot batch dim is axis 1
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            cache = jax.tree.map(
+                lambda x: jax.device_put(x, NamedSharding(
+                    mesh, P(None, "data", *([None] * (x.ndim - 2))))), cache)
+        self.cache = cache
+
+        self._decode = jax.jit(
+            lambda p, tok, c, off: T.decode_step(p, cfg, tok, c, off))
+        self._sample = jax.jit(_make_sampler(self._key, ecfg.temperature))
+        # admission: slice the slot's row, prefill one chunk into it, write
+        # it back — one compiled function per variant, traced slot index.
+        # Interior chunks only feed the cache, so they skip the full-vocab
+        # head projection (the dominant admission FLOPs at real vocab sizes)
+        def admit(with_logits):
+            def fn(p, c, tokens, slot, offset):
+                sub = T.take_slot(c, slot)
+                logits, sub = T.prefill_chunk(p, cfg, tokens, sub, offset,
+                                              with_logits=with_logits)
+                return logits, T.write_slot(c, sub, slot)
+            return jax.jit(fn)
+        self._admit = admit(True)
+        self._admit_quiet = admit(False)
+        self._reset = jax.jit(T.reset_slot)
+
+    def _put(self, x):
+        if self._data_spec is None:
+            return x
+        return jax.device_put(x, self._data_spec(np.ndim(x)))
+
+    # -- request intake ---------------------------------------------------
+    def submit(self, requests) -> None:
+        if isinstance(requests, Request):
+            requests = [requests]
+        # validate the WHOLE batch before recording anything: a bad request
+        # must not leave phantom metrics records for its batchmates
+        for r in requests:
+            need = len(r.prompt) + r.max_new_tokens
+            if need > self.ecfg.max_len:
+                raise ValueError(
+                    f"request {r.req_id}: prompt+gen {need} exceeds "
+                    f"max_len {self.ecfg.max_len}")
+        for r in requests:
+            self.metrics.on_submit(r.req_id, r.arrival_s, len(r.prompt))
+        self.queue.submit(requests)
+
+    # -- engine phases (one call each per step) ---------------------------
+    def _admit_ready(self, now_s: float) -> None:
+        for slot in self.table.free():
+            req = self.queue.pop_ready(now_s)
+            if req is None:
+                return
+            self.table.assign(slot, req)
+            self.cache = self._reset(self.cache, slot.index)
+            self.metrics.on_admit(req.req_id)
+
+    def _finish(self, slot) -> None:
+        req = slot.request
+        self.results[req.req_id] = list(slot.output)
+        self.table.release(slot)
+        self.metrics.on_finish(req.req_id)
+
+    def _complete_if_done(self, slot, token: int) -> bool:
+        eos = self.ecfg.eos_id
+        if (eos is not None and token == eos) \
+                or slot.generated >= slot.request.max_new_tokens:
+            self._finish(slot)
+            return True
+        return False
+
+    def _prefill_tick(self) -> None:
+        """Advance up to ``chunks_per_step`` admission prefills one chunk.
+
+        Chunk geometry keeps every write in-bounds without padding leaking
+        past the prompt: short prompts (≤ chunk) pad at the END (garbage
+        positions are causally masked until overwritten by decode); a
+        ragged TAIL chunk is RIGHT-ALIGNED at ``plen - chunk``, re-writing
+        the overlap with bit-identical k/v (k/v at a position depend only
+        on its token, its position, and the already-written prefix).
+        """
+        C = self._chunk
+        budget = self.ecfg.chunks_per_step
+        for slot in self.table.prefilling():
+            if budget <= 0:
+                return
+            prompt = np.asarray(slot.request.prompt, np.int32)
+            plen = len(prompt)
+            remaining = plen - slot.prefill_pos
+            chunk = np.zeros((1, C), np.int32)
+            if plen <= C:                       # whole prompt, end-padded
+                start, last_row = 0, plen - 1
+                chunk[0, :plen] = prompt
+            elif remaining > C:                 # full interior chunk
+                start, last_row = slot.prefill_pos, C - 1
+                chunk[0] = prompt[start:start + C]
+            else:                               # right-aligned tail chunk
+                start, last_row = plen - C, C - 1
+                chunk[0] = prompt[start:plen]
+            final = remaining <= C
+            admit = self._admit if final else self._admit_quiet
+            logits, self.cache = admit(
+                self.params, self.cache, jnp.asarray(chunk),
+                slot.index, start)
+            slot.prefill_pos += remaining if remaining <= C else C
+            slot.length = slot.prefill_pos
+            self.metrics.on_prefill_chunk(min(remaining, C))
+            budget -= 1
+            if slot.prefill_pos >= plen:
+                # prompt fully cached: sample the request's token 0 from the
+                # logits at the REAL last prompt position of this chunk
+                row = jnp.asarray(logits)[:, last_row]          # [1,V]
+                tok = int(self._sample(
+                    row, jnp.asarray([slot.req_id], jnp.int32),
+                    jnp.asarray([0], jnp.int32))[0])
+                self.table.activate(slot, tok)
+                self.metrics.on_first_token(slot.req_id)
+                self._complete_if_done(slot, tok)
+
+    def _decode_tick(self) -> None:
+        if self.table.n_active == 0:
+            return
+        tokens, offsets, active, req_ids, tok_idx = self.table.decode_inputs()
+        logits, self.cache = self._decode(
+            self.params, self._put(jnp.asarray(tokens)), self.cache,
+            self._put(jnp.asarray(offsets)))
+        toks = np.asarray(self._sample(
+            logits[:, 0], self._put(jnp.asarray(req_ids)),
+            self._put(jnp.asarray(tok_idx))))
+        self.metrics.on_decode_step(int(active.sum()))
+        for slot in self.table.active():
+            tok = int(toks[slot.index])
+            slot.length += 1          # pending token was cached this step
+            slot.pending_token = tok
+            slot.generated += 1
+            slot.output.append(tok)
+            self.metrics.on_token(slot.req_id)
+            self._complete_if_done(slot, tok)
+
+    def step(self) -> None:
+        """One engine iteration: admissions, a prefill tick, a decode step."""
+        self._admit_ready(self.metrics.now())
+        self._prefill_tick()
+        self._decode_tick()
+
+    def run(self, requests: Optional[Sequence[Request]] = None
+            ) -> Dict[int, List[int]]:
+        """Serve until the queue and every slot drain; returns outputs."""
+        if requests:
+            self.submit(list(requests))
+        self.metrics.start()
+        while len(self.queue) or self.table.busy():
+            if not self.table.busy():
+                nxt = self.queue.next_arrival()
+                now = self.metrics.now()
+                if nxt is not None and nxt > now:
+                    time.sleep(min(nxt - now, 0.01))   # open-loop idle
+            self.step()
+        self.metrics.stop()
+        return self.results
+
+
+# ---------------------------------------------------------------------------
+# wave-at-a-time baseline (what PR 2 shipped) — kept for A/B benchmarks
+# ---------------------------------------------------------------------------
+
+
+def serve_waves(cfg: ArchConfig, params, ecfg: EngineConfig,
+                requests: Sequence[Request]):
+    """Admit ≤ max_slots requests per wave; decode until the wave drains.
+
+    Freed slots idle until the whole wave finishes — the occupancy/
+    throughput gap to ``ServeEngine`` on ragged output lengths is exactly
+    what ``benchmarks/serve_bench.py`` measures.  Prompts within a wave
+    must share one length (the wave loop batch-prefills).  Sampling uses
+    the same fold-in discipline, so per-request outputs match the
+    continuous engine token for token.
+    """
+    _check_arch(cfg, allow_recurrent=True)
+    S, max_len = ecfg.max_slots, ecfg.max_len
+    metrics = ServeMetrics(max_slots=S)
+    results: Dict[int, List[int]] = {}
+
+    prefill = jax.jit(lambda p, t, c: T.prefill(p, cfg, t, c, None))
+    decode = jax.jit(lambda p, t, c, o: T.decode_step(p, cfg, t, c, o))
+    sample_j = jax.jit(_make_sampler(jax.random.key(ecfg.seed),
+                                     ecfg.temperature))
+
+    reqs = sorted(requests, key=lambda r: (r.arrival_s, r.req_id))
+    for r in reqs:
+        metrics.on_submit(r.req_id, r.arrival_s, len(r.prompt))
+    metrics.start()
+    for w0 in range(0, len(reqs), S):
+        wave = reqs[w0:w0 + S]
+        plens = {len(r.prompt) for r in wave}
+        if len(plens) != 1:
+            raise ValueError("wave baseline needs uniform prompt lengths "
+                             f"within a wave, got {sorted(plens)}")
+        P = plens.pop()
+        # a wave starts only once its LAST member arrived — slots freed
+        # mid-wave cannot admit (that is the baseline's pathology)
+        wave_start = max(r.arrival_s for r in wave)
+        now = metrics.now()
+        if wave_start > now:
+            time.sleep(wave_start - now)
+        B = len(wave)
+        cache = T.init_cache(cfg, B, max_len)
+        prompts = jnp.asarray([list(r.prompt) for r in wave], jnp.int32)
+        req_ids = jnp.asarray([r.req_id for r in wave], jnp.int32)
+        for r in wave:
+            metrics.on_admit(r.req_id)
+        logits, cache, offset = prefill(params, prompts, cache)
+        metrics.on_prefill_chunk(B * P)
+        toks = np.asarray(sample_j(logits[:, -1], req_ids,
+                                   jnp.zeros((B,), jnp.int32)))
+        outs = [[int(t)] for t in toks]
+        done = np.zeros((B,), bool)
+        for i, r in enumerate(wave):
+            metrics.on_first_token(r.req_id)
+            if (ecfg.eos_id is not None and outs[i][0] == ecfg.eos_id) \
+                    or r.max_new_tokens == 1:
+                done[i] = True
+                metrics.on_finish(r.req_id)
+        gen = 1
+        max_gen = max(r.max_new_tokens for r in wave)
+        while not done.all() and gen < max_gen:
+            tok_in = jnp.asarray(toks, jnp.int32)[:, None]
+            logits, cache = decode(params, tok_in, cache,
+                                   jnp.asarray(P + gen - 1, jnp.int32))
+            toks = np.asarray(sample_j(
+                logits[:, 0], req_ids, jnp.full((B,), gen, jnp.int32)))
+            metrics.on_decode_step(int((~done).sum()))
+            for i, r in enumerate(wave):
+                if done[i]:
+                    continue       # slot idles until the wave drains
+                outs[i].append(int(toks[i]))
+                metrics.on_token(r.req_id)
+                if (ecfg.eos_id is not None and outs[i][-1] == ecfg.eos_id) \
+                        or len(outs[i]) >= r.max_new_tokens:
+                    done[i] = True
+                    metrics.on_finish(r.req_id)
+            gen += 1
+        for i, r in enumerate(wave):
+            results[r.req_id] = outs[i]
+            if not done[i]:
+                metrics.on_finish(r.req_id)
+    metrics.stop()
+    return results, metrics

@@ -1,0 +1,155 @@
+"""Serving metrics: per-request TTFT, per-step throughput, slot occupancy.
+
+Two clocks run side by side:
+
+  * the **step clock** — deterministic counters (decode steps, tokens out,
+    active-slot sums) that benchmarks and CI assert on;
+  * the **wall clock** — measured seconds for the human-facing tok/s and
+    TTFT numbers (noisy on shared CI machines, never asserted).
+
+``occupancy`` is the serve engine's headline number: the fraction of
+slot-steps that decoded a live request.  The wave baseline burns slot-steps
+on padding until the longest request in the wave drains; continuous
+admission refills slots the moment EOS frees them.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class RequestRecord:
+    req_id: int
+    arrival_s: float = 0.0
+    admitted_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    finished_s: Optional[float] = None
+    prompt_len: int = 0
+    tokens_out: int = 0
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+
+@dataclass
+class ServeMetrics:
+    max_slots: int = 1
+    requests: Dict[int, RequestRecord] = field(default_factory=dict)
+    decode_steps: int = 0
+    active_slot_steps: int = 0       # Σ over decode steps of live slots
+    decode_tokens: int = 0           # tokens produced by decode steps
+    prefill_chunks: int = 0
+    prefill_tokens: int = 0
+    _t0: Optional[float] = None
+    wall_s: float = 0.0
+
+    # -- clock ------------------------------------------------------------
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        if self._t0 is None:
+            self.start()
+        return time.monotonic() - self._t0
+
+    def stop(self) -> None:
+        self.wall_s = self.now()
+
+    # -- events -----------------------------------------------------------
+    def on_submit(self, req_id: int, arrival_s: float, prompt_len: int) -> None:
+        self.requests[req_id] = RequestRecord(
+            req_id=req_id, arrival_s=arrival_s, prompt_len=prompt_len)
+
+    def on_admit(self, req_id: int) -> None:
+        self.requests[req_id].admitted_s = self.now()
+
+    def on_prefill_chunk(self, n_tokens: int) -> None:
+        self.prefill_chunks += 1
+        self.prefill_tokens += n_tokens
+
+    def on_first_token(self, req_id: int) -> None:
+        self.requests[req_id].first_token_s = self.now()
+        self.requests[req_id].tokens_out += 1
+
+    def on_decode_step(self, n_active: int) -> None:
+        self.decode_steps += 1
+        self.active_slot_steps += n_active
+        self.decode_tokens += n_active
+
+    def on_token(self, req_id: int) -> None:
+        self.requests[req_id].tokens_out += 1
+
+    def on_finish(self, req_id: int) -> None:
+        self.requests[req_id].finished_s = self.now()
+
+    # -- aggregates -------------------------------------------------------
+    @property
+    def tokens_out(self) -> int:
+        return sum(r.tokens_out for r in self.requests.values())
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of decode slot-steps spent on live requests."""
+        if self.decode_steps == 0:
+            return 0.0
+        return self.active_slot_steps / (self.decode_steps * self.max_slots)
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Decode tokens per decode step — the deterministic throughput
+        proxy: per-step cost is shape-constant, so tok/s ∝ tokens/step."""
+        if self.decode_steps == 0:
+            return 0.0
+        return self.decode_tokens / self.decode_steps
+
+    def ttfts(self) -> List[float]:
+        return sorted(r.ttft_s for r in self.requests.values()
+                      if r.ttft_s is not None)
+
+    def _pct(self, xs: List[float], q: float) -> float:
+        if not xs:
+            return float("nan")
+        i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
+        return xs[i]
+
+    def summary(self) -> Dict[str, float]:
+        ttfts = self.ttfts()
+        wall = self.wall_s or self.now()
+        return {
+            "requests": len(self.requests),
+            "completed": sum(1 for r in self.requests.values()
+                             if r.finished_s is not None),
+            "tokens_out": self.tokens_out,
+            "decode_steps": self.decode_steps,
+            "tokens_per_step": self.tokens_per_step,
+            "occupancy": self.occupancy,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_tokens": self.prefill_tokens,
+            "ttft_mean_s": (sum(ttfts) / len(ttfts)) if ttfts else float("nan"),
+            "ttft_p50_s": self._pct(ttfts, 0.50),
+            "ttft_p95_s": self._pct(ttfts, 0.95),
+            "wall_s": wall,
+            "tokens_per_s": self.tokens_out / wall if wall > 0 else 0.0,
+        }
+
+    def report(self) -> str:
+        s = self.summary()
+        return (
+            f"requests : {s['completed']:.0f}/{s['requests']:.0f} completed, "
+            f"{s['tokens_out']:.0f} tokens out\n"
+            f"decode   : {s['decode_steps']:.0f} steps, "
+            f"{s['tokens_per_step']:.2f} tok/step, "
+            f"occupancy {s['occupancy'] * 100:.1f}%\n"
+            f"prefill  : {s['prefill_chunks']:.0f} chunks, "
+            f"{s['prefill_tokens']:.0f} tokens\n"
+            f"ttft     : mean {s['ttft_mean_s'] * 1e3:.1f} ms, "
+            f"p50 {s['ttft_p50_s'] * 1e3:.1f} ms, "
+            f"p95 {s['ttft_p95_s'] * 1e3:.1f} ms\n"
+            f"wall     : {s['wall_s']:.2f} s, "
+            f"{s['tokens_per_s']:.0f} tok/s")

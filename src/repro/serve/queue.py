@@ -1,0 +1,128 @@
+"""Request queue + synthetic arrival processes for the serve engine.
+
+A ``Request`` is everything admission needs: prompt tokens, a per-request
+generation budget, and an arrival time on the engine's step clock.  The
+queue releases requests whose arrival time has passed — the engine polls it
+once per step, so arrivals gate *admission*, never the decode loop.
+
+Arrival generators:
+
+  * ``poisson_arrivals(n, rate, seed)`` — exponential inter-arrival gaps
+    (the classic open-loop load model), in seconds of engine clock;
+  * ``trace_arrivals(spec)``           — explicit timestamps, either a
+    comma-separated string ("0,0.5,0.5,2") or a file with one per line;
+  * ``parse_arrival_spec("poisson:8", n, seed)`` — the CLI surface.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request.
+
+    prompt          : token ids (host ints; the engine pads/chunks them)
+    max_new_tokens  : generation budget, counting the first (prefill) token
+    arrival_s       : arrival time on the engine clock (seconds)
+    req_id          : unique id — also the RNG fold-in domain, so sampling
+                      is deterministic per request regardless of which slot
+                      or admission order serves it
+    """
+
+    req_id: int
+    prompt: Sequence[int]
+    max_new_tokens: int
+    arrival_s: float = 0.0
+
+    def __post_init__(self):
+        if len(self.prompt) == 0:
+            raise ValueError(f"request {self.req_id}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"request {self.req_id}: max_new_tokens must be >= 1")
+
+
+@dataclass
+class RequestQueue:
+    """Arrival-ordered FIFO releasing requests whose time has come."""
+
+    _pending: List[Request] = field(default_factory=list)
+
+    def submit(self, requests) -> None:
+        if isinstance(requests, Request):
+            requests = [requests]
+        self._pending.extend(requests)
+        self._pending.sort(key=lambda r: (r.arrival_s, r.req_id))
+
+    def pop_ready(self, now_s: float) -> Optional[Request]:
+        """Next request with arrival_s <= now_s, or None."""
+        if self._pending and self._pending[0].arrival_s <= now_s:
+            return self._pending.pop(0)
+        return None
+
+    def next_arrival(self) -> Optional[float]:
+        return self._pending[0].arrival_s if self._pending else None
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(n: int, rate_per_s: float, seed: int = 0
+                     ) -> Tuple[float, ...]:
+    """n arrival times with Exp(rate) inter-arrival gaps, starting at 0."""
+    if rate_per_s <= 0:
+        raise ValueError("poisson rate must be > 0")
+    if n == 0:
+        return ()
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_per_s, size=n)
+    gaps[0] = 0.0                       # first request arrives immediately
+    return tuple(np.cumsum(gaps).tolist())
+
+
+def trace_arrivals(spec: str) -> Tuple[float, ...]:
+    """Timestamps from a comma-separated string or a one-per-line file."""
+    if os.path.exists(spec):
+        with open(spec) as f:
+            raw = [ln.strip() for ln in f if ln.strip()]
+    else:
+        raw = [tok.strip() for tok in spec.split(",") if tok.strip()]
+    if not raw:
+        raise ValueError(f"empty arrival trace {spec!r}")
+    times = tuple(float(tok) for tok in raw)
+    if any(b < a for a, b in zip(times, times[1:])):
+        raise ValueError("arrival trace must be non-decreasing")
+    return times
+
+
+def parse_arrival_spec(spec: str, n: int, seed: int = 0) -> Tuple[float, ...]:
+    """CLI arrival spec → n arrival times.
+
+      "immediate"      every request present at t=0 (closed-loop batch)
+      "poisson:RATE"   open-loop Poisson at RATE req/s
+      "trace:SPEC"     explicit timestamps (string or file); must supply at
+                       least n arrivals, truncated to the first n
+    """
+    if spec == "immediate":
+        return (0.0,) * n
+    if spec.startswith("poisson:"):
+        return poisson_arrivals(n, float(spec.split(":", 1)[1]), seed)
+    if spec.startswith("trace:"):
+        times = trace_arrivals(spec.split(":", 1)[1])
+        if len(times) < n:
+            raise ValueError(
+                f"trace has {len(times)} arrivals for {n} requests")
+        return times[:n]
+    raise ValueError(f"unknown arrival spec {spec!r} "
+                     "(immediate | poisson:RATE | trace:SPEC)")

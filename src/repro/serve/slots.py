@@ -1,0 +1,138 @@
+"""Host-side slot bookkeeping for the continuous-batching engine.
+
+The device sees a fixed [S]-shaped batch every decode step (jit-stable);
+the *meaning* of each row — which request it serves, how long its sequence
+is, whether it is live — lives here, in plain numpy, mirrored into the
+device inputs once per step by ``decode_inputs``.
+
+Slot lifecycle:
+
+    FREE ──assign──▶ PREFILL ──(last chunk, first token)──▶ ACTIVE
+      ▲                                                        │
+      └──────────────── release (EOS / budget) ◀───────────────┘
+
+Inactive rows still flow through the batched decode step (masked): their
+token input is 0 and their write offset is the cache sentinel ``max_len-1``
+— a position the causal mask hides until the moment a live request writes
+its own token there, so garbage never leaks into any slot's attention.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from .queue import Request
+
+FREE, PREFILL, ACTIVE = 0, 1, 2
+
+
+@dataclass
+class Slot:
+    index: int
+    state: int = FREE
+    request: Optional[Request] = None
+    length: int = 0          # tokens currently in this slot's cache row
+    prefill_pos: int = 0     # prompt tokens already written
+    generated: int = 0       # tokens sampled for this request so far
+    pending_token: int = 0   # next token to feed the decode step
+    output: List[int] = field(default_factory=list)
+
+    @property
+    def req_id(self) -> int:
+        return self.request.req_id if self.request is not None else -1
+
+
+class SlotTable:
+    """Fixed pool of S slots + the [S]-shaped device-input builders."""
+
+    def __init__(self, max_slots: int, max_len: int):
+        if max_slots < 1:
+            raise ValueError("need at least one slot")
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.slots = [Slot(i) for i in range(max_slots)]
+
+    # -- queries ----------------------------------------------------------
+    def free(self) -> List[Slot]:
+        return [s for s in self.slots if s.state == FREE]
+
+    def prefilling(self) -> List[Slot]:
+        return [s for s in self.slots if s.state == PREFILL]
+
+    def active(self) -> List[Slot]:
+        return [s for s in self.slots if s.state == ACTIVE]
+
+    def busy(self) -> List[Slot]:
+        return [s for s in self.slots if s.state != FREE]
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for s in self.slots if s.state == ACTIVE)
+
+    # -- lifecycle --------------------------------------------------------
+    def assign(self, slot: Slot, request: Request) -> None:
+        if slot.state != FREE:
+            raise RuntimeError(f"slot {slot.index} not free")
+        need = len(request.prompt) + request.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request {request.req_id} needs {need} cache positions, "
+                f"slot holds {self.max_len}")
+        slot.state = PREFILL
+        slot.request = request
+        slot.length = 0
+        slot.prefill_pos = 0
+        slot.generated = 0
+        slot.pending_token = 0
+        slot.output = []
+
+    def activate(self, slot: Slot, first_token: int) -> None:
+        """Prefill finished: cache holds the prompt, first token sampled."""
+        if slot.state != PREFILL:
+            raise RuntimeError(f"slot {slot.index} not prefilling")
+        slot.state = ACTIVE
+        slot.length = len(slot.request.prompt)
+        slot.pending_token = int(first_token)
+        slot.generated = 1
+        slot.output = [int(first_token)]
+
+    def release(self, slot: Slot) -> Request:
+        if slot.state == FREE:
+            raise RuntimeError(f"slot {slot.index} already free")
+        request = slot.request
+        slot.state = FREE
+        slot.request = None
+        slot.length = 0
+        slot.prefill_pos = 0
+        slot.generated = 0
+        slot.pending_token = 0
+        return request
+
+    # -- device-input builders --------------------------------------------
+    def decode_inputs(self):
+        """(tokens [S,1], offsets [S], active [S], req_ids [S], tok_idx [S]).
+
+        ``offsets`` is each ACTIVE slot's current length (the position its
+        pending token is written to and attends from); masked rows write to
+        the sentinel ``max_len-1``.  ``tok_idx`` is the per-request token
+        index of the token being sampled THIS step (generated count), the
+        second fold-in of the RNG discipline.
+        """
+        S = self.max_slots
+        tokens = np.zeros((S, 1), np.int32)
+        offsets = np.full((S,), self.max_len - 1, np.int32)
+        active = np.zeros((S,), bool)
+        req_ids = np.zeros((S,), np.int32)
+        tok_idx = np.zeros((S,), np.int32)
+        for s in self.slots:
+            if s.state != ACTIVE:
+                continue
+            tokens[s.index, 0] = s.pending_token
+            offsets[s.index] = s.length
+            active[s.index] = True
+            req_ids[s.index] = s.req_id
+            tok_idx[s.index] = s.generated
+        return tokens, offsets, active, req_ids, tok_idx

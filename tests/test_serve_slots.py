@@ -1,0 +1,187 @@
+"""Unit tests for the serve subsystem's host-side plumbing:
+slot table lifecycle, request queue + arrival processes, metrics."""
+
+import numpy as np
+import pytest
+
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import (Request, RequestQueue, parse_arrival_spec,
+                               poisson_arrivals, trace_arrivals)
+from repro.serve.slots import ACTIVE, FREE, PREFILL, SlotTable
+
+
+def _req(i, plen=4, gen=3, arrival=0.0):
+    return Request(req_id=i, prompt=list(range(1, plen + 1)),
+                   max_new_tokens=gen, arrival_s=arrival)
+
+
+# ---------------------------------------------------------------------------
+# Request / RequestQueue
+# ---------------------------------------------------------------------------
+
+
+def test_request_rejects_empty_prompt():
+    with pytest.raises(ValueError, match="empty prompt"):
+        Request(req_id=0, prompt=[], max_new_tokens=1)
+
+
+def test_request_rejects_zero_budget():
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        Request(req_id=0, prompt=[1], max_new_tokens=0)
+
+
+def test_queue_orders_by_arrival_then_id():
+    q = RequestQueue()
+    q.submit([_req(2, arrival=1.0), _req(0, arrival=0.5),
+              _req(1, arrival=0.5)])
+    assert q.pop_ready(2.0).req_id == 0
+    assert q.pop_ready(2.0).req_id == 1
+    assert q.pop_ready(2.0).req_id == 2
+    assert q.pop_ready(2.0) is None
+
+
+def test_queue_gates_on_arrival_time():
+    q = RequestQueue()
+    q.submit(_req(0, arrival=5.0))
+    assert q.pop_ready(4.9) is None
+    assert len(q) == 1
+    assert q.next_arrival() == 5.0
+    assert q.pop_ready(5.0).req_id == 0
+    assert q.next_arrival() is None
+
+
+def test_poisson_arrivals_shape_and_monotonicity():
+    times = poisson_arrivals(32, rate_per_s=10.0, seed=3)
+    assert len(times) == 32
+    assert times[0] == 0.0
+    assert all(b >= a for a, b in zip(times, times[1:]))
+    # mean gap ≈ 1/rate (loose: 32 samples)
+    gaps = np.diff(times)
+    assert 0.02 < gaps.mean() < 0.5
+
+
+def test_poisson_rejects_bad_rate():
+    with pytest.raises(ValueError):
+        poisson_arrivals(4, rate_per_s=0.0)
+
+
+def test_poisson_zero_requests_is_empty():
+    assert poisson_arrivals(0, rate_per_s=5.0) == ()
+
+
+def test_trace_arrivals_from_string_and_file(tmp_path):
+    assert trace_arrivals("0, 0.5,2") == (0.0, 0.5, 2.0)
+    p = tmp_path / "trace.txt"
+    p.write_text("0\n1.5\n1.5\n3\n")
+    assert trace_arrivals(str(p)) == (0.0, 1.5, 1.5, 3.0)
+
+
+def test_trace_arrivals_rejects_decreasing():
+    with pytest.raises(ValueError, match="non-decreasing"):
+        trace_arrivals("1,0.5")
+
+
+def test_parse_arrival_spec():
+    assert parse_arrival_spec("immediate", 3) == (0.0, 0.0, 0.0)
+    assert len(parse_arrival_spec("poisson:100", 5, seed=1)) == 5
+    assert parse_arrival_spec("trace:0,1,2", 2) == (0.0, 1.0)
+    with pytest.raises(ValueError, match="unknown arrival"):
+        parse_arrival_spec("bursty", 2)
+    with pytest.raises(ValueError, match="trace has"):
+        parse_arrival_spec("trace:0,1", 5)
+
+
+# ---------------------------------------------------------------------------
+# SlotTable
+# ---------------------------------------------------------------------------
+
+
+def test_slot_lifecycle():
+    table = SlotTable(max_slots=2, max_len=16)
+    assert len(table.free()) == 2 and table.n_active == 0
+    slot = table.free()[0]
+    table.assign(slot, _req(7, plen=4, gen=3))
+    assert slot.state == PREFILL and table.prefilling() == [slot]
+    table.activate(slot, first_token=42)
+    assert slot.state == ACTIVE and slot.length == 4
+    assert slot.output == [42] and slot.generated == 1
+    req = table.release(slot)
+    assert req.req_id == 7 and slot.state == FREE
+
+
+def test_slot_assign_rejects_busy_and_oversize():
+    table = SlotTable(max_slots=1, max_len=8)
+    slot = table.slots[0]
+    with pytest.raises(ValueError, match="cache positions"):
+        table.assign(slot, _req(0, plen=6, gen=4))    # 10 > 8
+    table.assign(slot, _req(0, plen=4, gen=3))
+    with pytest.raises(RuntimeError, match="not free"):
+        table.assign(slot, _req(1))
+    table.activate(slot, 1)
+    with pytest.raises(RuntimeError, match="not prefilling"):
+        table.activate(slot, 1)            # activating twice must fail
+
+
+def test_slot_release_free_raises():
+    table = SlotTable(max_slots=1, max_len=8)
+    with pytest.raises(RuntimeError, match="already free"):
+        table.release(table.slots[0])
+
+
+def test_decode_inputs_masking_and_sentinel():
+    table = SlotTable(max_slots=3, max_len=32)
+    s0, s1, s2 = table.slots
+    table.assign(s0, _req(5, plen=4, gen=4))
+    table.activate(s0, first_token=9)
+    table.assign(s1, _req(6, plen=3, gen=2))          # stays PREFILL
+    tokens, offsets, active, req_ids, tok_idx = table.decode_inputs()
+    assert tokens.shape == (3, 1) and tokens[0, 0] == 9 and tokens[2, 0] == 0
+    assert offsets[0] == 4                      # active slot: its length
+    assert offsets[1] == offsets[2] == 31       # masked rows: sentinel
+    assert active.tolist() == [True, False, False]
+    assert req_ids[0] == 5 and tok_idx[0] == 1  # next sampled = token 1
+
+
+def test_slot_table_rejects_empty_pool():
+    with pytest.raises(ValueError):
+        SlotTable(max_slots=0, max_len=8)
+
+
+# ---------------------------------------------------------------------------
+# ServeMetrics
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_occupancy_and_tokens_per_step():
+    m = ServeMetrics(max_slots=4)
+    m.start()
+    m.on_submit(0, 0.0, 8)
+    m.on_decode_step(4)
+    m.on_decode_step(2)
+    assert m.decode_steps == 2
+    assert m.occupancy == pytest.approx(6 / 8)
+    assert m.tokens_per_step == pytest.approx(3.0)
+
+
+def test_metrics_ttft_and_summary():
+    m = ServeMetrics(max_slots=2)
+    m.start()
+    for i in range(3):
+        m.on_submit(i, 0.0, 4)
+        m.on_admit(i)
+        m.on_first_token(i)
+        m.on_finish(i)
+    m.stop()
+    s = m.summary()
+    assert s["requests"] == 3 and s["completed"] == 3
+    assert s["tokens_out"] == 3            # one (first) token each
+    assert len(m.ttfts()) == 3
+    assert s["ttft_p50_s"] >= 0 and s["ttft_p95_s"] >= s["ttft_p50_s"]
+    assert "occupancy" in m.report()
+
+
+def test_metrics_empty_edge_cases():
+    m = ServeMetrics(max_slots=4)
+    assert m.occupancy == 0.0 and m.tokens_per_step == 0.0
+    assert m.ttfts() == []
+    assert np.isnan(m.summary()["ttft_p50_s"])

@@ -48,22 +48,52 @@ def test_train_cli_runs_and_learns(tmp_path):
 
 
 @pytest.mark.slow
-def test_serve_cli_runs():
+def test_serve_cli_runs_continuous():
     out = _run(["-m", "repro.launch.serve", "--arch", "gemma2-2b-smoke",
-                "--requests", "2", "--prompt-len", "8", "--gen", "4"])
-    assert "decode" in out
-    assert "decoded=4" in out      # no eos configured: full wave
+                "--requests", "6", "--prompt-len", "8", "--gen", "6",
+                "--gen-spread", "4", "--max-slots", "2",
+                "--prefill-chunk", "8"])
+    assert "mode=continuous" in out
+    assert "6/6 completed" in out
+    assert "occupancy" in out and "ttft" in out
 
 
 @pytest.mark.slow
-def test_serve_cli_eos_early_exit():
-    # greedy decoding is deterministic: learn a token the wave emits, then
-    # re-run with it as EOS — the decode loop must stop early
-    out = _run(["-m", "repro.launch.serve", "--arch", "gemma2-2b-smoke",
-                "--requests", "1", "--prompt-len", "8", "--gen", "6"])
+def test_serve_cli_wave_and_continuous_agree():
+    # fold-in sampling makes scheduling invisible: both modes emit the same
+    # per-request tokens (greedy, same seed)
+    args = ["-m", "repro.launch.serve", "--arch", "gemma2-2b-smoke",
+            "--requests", "4", "--prompt-len", "8", "--gen", "5",
+            "--max-slots", "2", "--prefill-chunk", "8"]
+    out_c = _run(args + ["--mode", "continuous"])
+    out_w = _run(args + ["--mode", "wave"])
+    pick = lambda o: next(l for l in o.splitlines()  # noqa: E731
+                          if l.startswith("sample outputs"))
+    assert pick(out_c).strip() == pick(out_w).strip()
+
+
+@pytest.mark.slow
+def test_serve_cli_eos_frees_slots_early():
+    # greedy decoding is deterministic: learn an emitted token, then re-run
+    # with it as EOS — requests must complete early (fewer tokens out)
+    base = ["-m", "repro.launch.serve", "--arch", "gemma2-2b-smoke",
+            "--requests", "2", "--prompt-len", "8", "--gen", "6",
+            "--max-slots", "2", "--prefill-chunk", "8"]
+    out = _run(base)
     line = next(l for l in out.splitlines() if l.startswith("sample outputs"))
     eos = eval(line.split(":", 1)[1])[0][1]    # second generated token
+    out = _run(base + ["--eos-id", str(eos)])
+    line = next(l for l in out.splitlines() if l.startswith("sample outputs"))
+    first = eval(line.split(":", 1)[1])[0]
+    assert first[-1] == eos and len(first) < 6
+
+
+@pytest.mark.slow
+def test_serve_cli_sharded_slots():
+    # the satellite CI path: continuous mode with the slot batch sharded
+    # over 8 host devices
     out = _run(["-m", "repro.launch.serve", "--arch", "gemma2-2b-smoke",
-                "--requests", "1", "--prompt-len", "8", "--gen", "6",
-                "--eos-id", str(eos)])
-    assert "early exit" in out and "decoded=2" in out
+                "--requests", "8", "--prompt-len", "8", "--gen", "4",
+                "--max-slots", "8", "--prefill-chunk", "8",
+                "--devices", "8"])
+    assert "devices=8" in out and "8/8 completed" in out
