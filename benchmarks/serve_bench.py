@@ -1,30 +1,42 @@
-"""Continuous admission vs wave-at-a-time serving on ragged output lengths.
+"""Serving A/B benchmarks: scheduling and KV-memory wins, both asserted.
 
-The wave baseline (PR 2's serve loop) admits ``max_slots`` requests, decodes
-until the WHOLE wave drains, and only then admits again — on ragged output
-lengths every wave burns slot-steps padding out its straggler.  The
-continuous engine refills a slot the moment EOS (or the budget) frees it,
-paying only the interleaved admission-prefill ticks.
+**Continuous vs wave** (PR 3): the wave baseline admits ``max_slots``
+requests, decodes until the WHOLE wave drains, and only then admits again —
+on ragged output lengths every wave burns slot-steps padding out its
+straggler.  The continuous engine refills a slot the moment EOS (or the
+budget) frees it, paying only the interleaved admission-prefill ticks.
 
-Both runners sample with the same fold-in RNG discipline, so per-request
-outputs are token-identical — the comparison isolates *scheduling*:
+**Paged vs contiguous** (this sweep): both engines get the SAME KV HBM
+budget (``contig_slots * max_len`` cache positions per layer — the paged
+pool is exactly that many positions, plus one sentinel block of
+bookkeeping).  The contiguous backend must reserve a full ``max_len`` row
+per slot, so the budget caps it at ``contig_slots`` concurrent requests
+even though a ragged long-context mix mostly uses a fraction of each row.
+The paged backend allocates blocks as sequences actually grow, so the same
+budget sustains strictly more live slots — higher tokens/step, fewer decode
+steps — while emitting token-identical outputs (same fold-in sampling, same
+chunk grid, bit-identical gathered attention).
 
-  * decode-step slot occupancy (live slot-steps / total slot-steps), and
+All runners share one RNG discipline, so per-request outputs are
+token-identical across every mode — the comparisons isolate *scheduling*
+and *memory*, not sampling noise.  Metrics asserted:
+
+  * decode-step slot occupancy and peak live slots (concurrency),
   * tokens per decode step — the deterministic tok/s proxy: the decode step
     is one fixed-shape compiled call, so per-step cost is constant and
     tok/s ∝ tokens/step (measured wall tok/s is printed, never asserted).
 
-The headline claim is asserted: on every swept cell, continuous admission
-strictly beats the wave baseline on BOTH metrics.
-
-Standalone: PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+Standalone: PYTHONPATH=src python -m benchmarks.serve_bench \
+                [--smoke] [--kv-mode all|contiguous|paged] [--devices N]
 Harness:    PYTHONPATH=src python -m benchmarks.run --only serve_bench
-CI runs ``--smoke`` (one cell) so the claim cannot rot.
+CI runs ``--smoke`` and ``--smoke --kv-mode paged --devices 8`` so neither
+claim can rot.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 
 import numpy as np
 
@@ -34,6 +46,18 @@ CELLS = (
     (8, 24, 8, 2, 24),      # wider pool, heavier churn
 )
 SMOKE_CELLS = ((4, 12, 8, 4, 24),)
+
+# (max_len, block_size, contig_slots, paged_slots,
+#  (n_short, p_lo, p_hi, g_lo, g_hi), (n_long, p_long, g_long))
+# Equal HBM budget: contig_slots * max_len positions; the paged pool gets
+# exactly that many (kv_blocks = budget/bs + 1 sentinel).  paged_slots is
+# a host-side cap only — free blocks gate admission.
+PAGED_CELLS = (
+    (192, 16, 4, 12, (20, 8, 24, 4, 16), (4, 80, 40)),
+)
+PAGED_SMOKE_CELLS = (
+    (64, 8, 8, 16, (40, 6, 12, 4, 10), (4, 24, 16)),
+)
 
 
 def make_requests(cfg, n, prompt_len, gen_lo, gen_hi, seed=0):
@@ -46,6 +70,41 @@ def make_requests(cfg, n, prompt_len, gen_lo, gen_hi, seed=0):
                 max_new_tokens=int(rng.integers(gen_lo, gen_hi + 1)))
         for i in range(n)
     ]
+
+
+def make_ragged_mix(cfg, short, long, seed=0):
+    """A ragged long-context mix: mostly short chats, a few long documents
+    — the workload where per-slot max_len reservations waste the most HBM.
+    Prompt lengths are drawn so block_size rarely divides them (chunk
+    boundaries straddle block edges)."""
+    from repro.serve import Request
+    n_short, p_lo, p_hi, g_lo, g_hi = short
+    n_long, p_long, g_long = long
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_short + n_long):
+        if n_long and i % (max(1, (n_short + n_long) // n_long)) == 0 \
+                and sum(1 for r in reqs if len(r.prompt) == p_long) < n_long:
+            plen, gen = p_long, g_long
+        else:
+            plen = int(rng.integers(p_lo, p_hi + 1))
+            gen = int(rng.integers(g_lo, g_hi + 1))
+        reqs.append(Request(
+            req_id=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=(plen,)).tolist(),
+            max_new_tokens=gen))
+    return reqs
+
+
+def _mesh_for(devices, max_slots):
+    if not devices:
+        return None
+    if max_slots % devices:
+        print(f"serve/note,unsharded,{max_slots} slots do not divide "
+              f"{devices} devices — this engine runs without a mesh")
+        return None
+    from repro.launch.mesh import make_mesh
+    return make_mesh((devices,), ("data",))
 
 
 def bench_cell(cfg, params, max_slots, n, prompt_len, gen_lo, gen_hi):
@@ -85,7 +144,61 @@ def bench_cell(cfg, params, max_slots, n, prompt_len, gen_lo, gen_hi):
     return cont, wave
 
 
-def run(smoke: bool = False) -> None:
+def bench_paged_cell(cfg, params, cell, devices=0):
+    from repro.serve import EngineConfig, ServeEngine
+
+    max_len, bs, contig_slots, paged_slots, short, long = cell
+    budget = contig_slots * max_len          # positions per layer leaf
+    usable = budget // bs
+    assert usable * bs == budget, "budget must be block-aligned"
+    chunk = min(16, max_len)
+
+    contig_cfg = EngineConfig(
+        max_slots=contig_slots, max_len=max_len, prefill_chunk=chunk,
+        chunks_per_step=2)
+    paged_cfg = EngineConfig(
+        max_slots=paged_slots, max_len=max_len, prefill_chunk=chunk,
+        chunks_per_step=2, kv_mode="paged", block_size=bs,
+        kv_blocks=usable + 1)                # +1: the sentinel block
+
+    cont = ServeEngine(cfg, params, contig_cfg,
+                       mesh=_mesh_for(devices, contig_slots))
+    cont_out = cont.run(make_ragged_mix(cfg, short, long))
+    cm = cont.metrics.summary()
+
+    paged = ServeEngine(cfg, params, paged_cfg,
+                        mesh=_mesh_for(devices, paged_slots))
+    paged_out = paged.run(make_ragged_mix(cfg, short, long))
+    pm = paged.metrics.summary()
+
+    assert paged_out == cont_out, (
+        "paged backend must emit token-identical outputs to contiguous")
+    assert pm["blocks_peak"] <= usable, (
+        f"paged used {pm['blocks_peak']} blocks, budget is {usable}")
+
+    n_req = short[0] + long[0]
+    cell_name = (f"{budget}pos/{n_req}req/"
+                 f"c{contig_slots}-p{paged_slots}slots/bs{bs}")
+    for label, m in (("contiguous", cm), ("paged", pm)):
+        print(f"serve/{cell_name},{label},steps={m['decode_steps']:.0f},"
+              f"peak_active={m['peak_active']:.0f},"
+              f"occupancy={m['occupancy']:.3f},"
+              f"tok_per_step={m['tokens_per_step']:.2f},"
+              f"hit_rate={m['prefix_hit_rate']:.2f},"
+              f"blocks_peak={m['blocks_peak']:.0f},"
+              f"preempt={m['preemptions']:.0f}")
+    assert pm["peak_active"] > cm["peak_active"], (
+        f"{cell_name}: paged peak concurrency {pm['peak_active']} must "
+        f"beat contiguous {cm['peak_active']} under the same HBM budget")
+    assert pm["tokens_per_step"] > cm["tokens_per_step"], (
+        f"{cell_name}: paged tokens/step {pm['tokens_per_step']:.2f} must "
+        f"beat contiguous {cm['tokens_per_step']:.2f}")
+    assert pm["decode_steps"] < cm["decode_steps"], (
+        f"{cell_name}: paged must finish in fewer decode steps")
+    return cm, pm
+
+
+def run(smoke: bool = False, kv_mode: str = "all", devices: int = 0) -> None:
     import jax
 
     from repro.models import transformer as T
@@ -93,20 +206,42 @@ def run(smoke: bool = False) -> None:
 
     cfg = get_config("gemma2-2b-smoke")
     params = T.init_params(cfg, jax.random.key(0))
-    cells = SMOKE_CELLS if smoke else CELLS
-    print("serve/cell,mode,steps,occupancy,tok_per_step,ttft_p50,wall_tok_s")
-    for cell in cells:
-        bench_cell(cfg, params, *cell)
-    print("serve/claim,ok,continuous admission beats wave baseline on "
-          "occupancy AND tokens/step (outputs token-identical)")
+    if kv_mode in ("all", "contiguous"):
+        cells = SMOKE_CELLS if smoke else CELLS
+        print("serve/cell,mode,steps,occupancy,tok_per_step,ttft_p50,"
+              "wall_tok_s")
+        for cell in cells:
+            bench_cell(cfg, params, *cell)
+        print("serve/claim,ok,continuous admission beats wave baseline on "
+              "occupancy AND tokens/step (outputs token-identical)")
+    if kv_mode in ("all", "paged"):
+        cells = PAGED_SMOKE_CELLS if smoke else PAGED_CELLS
+        print("serve/cell,mode,steps,peak_active,occupancy,tok_per_step,"
+              "hit_rate,blocks_peak,preempt")
+        for cell in cells:
+            bench_paged_cell(cfg, params, cell, devices=devices)
+        print("serve/claim,ok,paged KV serves the ragged mix at strictly "
+              "higher concurrency than contiguous under an equal HBM "
+              "budget (outputs token-identical)")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="one-cell sweep for CI")
+    ap.add_argument("--kv-mode", choices=("all", "contiguous", "paged"),
+                    default="all",
+                    help="which sweep: continuous-vs-wave (contiguous), "
+                         "paged-vs-contiguous (paged), or both")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard the slot batch over N host devices "
+                         "(engines whose slot count N divides)")
     args = ap.parse_args(argv)
-    run(smoke=args.smoke)
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+    run(smoke=args.smoke, kv_mode=args.kv_mode, devices=args.devices)
 
 
 if __name__ == "__main__":

@@ -2,11 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b-smoke \
       --requests 8 --prompt-len 32 --gen 16 --max-slots 4 \
+      [--kv-mode paged --block-size 16 --kv-blocks 64] \
       [--arrival poisson:50] [--eos-id 2] [--devices 8] [--mode wave]
 
 Built on ``repro.serve``: a fixed pool of ``--max-slots`` decode slots over
-the shared ring KV cache; queued requests are admitted the moment EOS (or
-the per-request budget) frees a slot, with chunked prefill interleaved
+one shared KV cache; queued requests are admitted the moment EOS (or the
+per-request budget) frees capacity, with chunked prefill interleaved
 between decode steps.  Reports per-request TTFT, per-step throughput and
 slot occupancy.  ``--mode wave`` runs the old wave-at-a-time loop for A/B
 comparison (see ``benchmarks/serve_bench.py``).
@@ -14,6 +15,11 @@ comparison (see ``benchmarks/serve_bench.py``).
   --arrival immediate | poisson:RATE | trace:SPEC   synthetic arrivals
   --gen-spread K        ragged output budgets: gen drawn from [gen-K, gen]
   --max-slots S         decode slot pool size (shards over --devices)
+  --kv-mode M           contiguous (one max_len row per slot) or paged
+                        (pooled blocks + block tables: admission gated on
+                        free blocks, prefix-cache sharing, preemption)
+  --block-size B        paged: positions per physical block
+  --kv-blocks N         paged: pool size (0 = match contiguous capacity)
 """
 
 import argparse
@@ -35,6 +41,13 @@ def main(argv=None):
                          "slot for the next admission")
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--kv-mode", choices=("contiguous", "paged"),
+                    default="contiguous")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV: cache positions per physical block")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="paged KV: physical blocks in the pool "
+                         "(0 = match contiguous capacity)")
     ap.add_argument("--arrival", default="immediate",
                     help="immediate | poisson:RATE | trace:SPEC")
     ap.add_argument("--mode", choices=("continuous", "wave"),
@@ -42,6 +55,9 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.mode == "wave" and args.kv_mode == "paged":
+        ap.error("--mode wave serves from the contiguous cache only")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -71,13 +87,21 @@ def main(argv=None):
         requests.append(Request(req_id=i, prompt=prompt, max_new_tokens=gen,
                                 arrival_s=arrivals[i]))
 
+    max_len = args.prompt_len + args.gen + 1
+    if args.kv_mode == "paged":
+        # the paged backend needs block_size | max_len (virtual view shape
+        # == contiguous row shape, the token-identity invariant)
+        max_len = -(-max_len // args.block_size) * args.block_size
     ecfg = EngineConfig(
         max_slots=args.max_slots,
-        max_len=args.prompt_len + args.gen + 1,
+        max_len=max_len,
         prefill_chunk=args.prefill_chunk,
         temperature=args.temperature,
         eos_id=args.eos_id,
-        seed=args.seed)
+        seed=args.seed,
+        kv_mode=args.kv_mode,
+        block_size=args.block_size,
+        kv_blocks=args.kv_blocks)
 
     mesh = None
     if args.devices:
@@ -87,10 +111,13 @@ def main(argv=None):
         else:
             mesh = make_mesh((args.devices,), ("data",))
 
-    print(f"arch={cfg.name} mode={args.mode} requests={args.requests} "
+    print(f"arch={cfg.name} mode={args.mode} kv={args.kv_mode} "
+          f"requests={args.requests} "
           f"prompt={args.prompt_len} gen={args.gen}"
           f"{f'±{args.gen_spread}' if args.gen_spread else ''} "
           f"slots={args.max_slots} arrival={args.arrival}"
+          + (f" block_size={args.block_size}" if args.kv_mode == "paged"
+             else "")
           + (f" devices={args.devices}" if args.devices else ""))
 
     if args.mode == "wave":

@@ -234,6 +234,65 @@ def gqa_attention(q, k, v, *, pos_q, pos_k, causal=True, window=None,
     return jnp.moveaxis(o, -2, 1).reshape(B, Tq, Hq, Dv).astype(q.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache primitives (pool [num_blocks, block_size, ...] + block table)
+# ---------------------------------------------------------------------------
+#
+# The serve engine's paged backend replaces the per-slot contiguous cache row
+# [B, S, ...] with one pooled tensor [num_blocks, block_size, ...] per leaf;
+# each slot maps virtual positions onto physical blocks through a fixed-width
+# block table [B, n_max] (jit-stable: unallocated entries padded with the
+# SENTINEL block 0, whose contents are garbage by construction and causally
+# masked everywhere).  With max_len % block_size == 0 the gathered virtual
+# view has the SAME shape and values as the contiguous row, so attention
+# over it agrees with the contiguous path — the token-identity invariant
+# the serve benchmarks assert end to end.
+
+PAGED_SENTINEL = 0
+
+
+def paged_gather(pool, tables):
+    """pool [N, bs, ...] + tables [B, n] -> virtual view [B, n*bs, ...].
+
+    Virtual position p of row b lives at pool[tables[b, p // bs], p % bs].
+    Sentinel-padded table entries gather garbage at virtual positions past
+    the row's allocated length — positions the causal mask always hides.
+    """
+    N, bs = pool.shape[:2]
+    B, n = tables.shape
+    g = jnp.take(pool, tables.reshape(-1), axis=0)        # [B*n, bs, ...]
+    return g.reshape((B, n * bs) + pool.shape[2:])
+
+
+def paged_scatter(pool, new, tables, offset):
+    """Write ``new`` [B,T,...] at virtual positions [offset, offset+T)
+    through ``tables`` [B, n] into ``pool`` [N, bs, ...].
+
+    ``offset`` is a scalar (chunked prefill; shared start) or, for T == 1
+    decode, a per-row [B] vector (slots at independent lengths).  Positions
+    beyond the table's span — end-padding of a short final prefill chunk —
+    are redirected to the SENTINEL block instead of clamping onto a live
+    block.  Masked decode rows carry an all-sentinel table row, so their
+    writes land in the sentinel block too.
+    """
+    N, bs = pool.shape[:2]
+    B, T = new.shape[:2]
+    n = tables.shape[1]
+    off = jnp.asarray(offset)
+    if off.ndim == 0:
+        pos = off.astype(jnp.int32) + jnp.arange(T, dtype=jnp.int32)
+        pos = jnp.broadcast_to(pos[None, :], (B, T))
+    elif T == 1:
+        pos = off.astype(jnp.int32)[:, None]
+    else:
+        raise ValueError("multi-token paged writes need a scalar offset")
+    bi = pos // bs
+    blk = jnp.take_along_axis(tables, jnp.clip(bi, 0, n - 1), axis=1)
+    blk = jnp.where(bi < n, blk, PAGED_SENTINEL)
+    flat = new.reshape((B * T,) + new.shape[2:]).astype(pool.dtype)
+    return pool.at[blk.reshape(-1), (pos % bs).reshape(-1)].set(flat)
+
+
 def _cache_update(buf, new, offset):
     """Write ``new`` [B,T,...] into cache ``buf`` [B,S,...] at ``offset``.
 
@@ -289,11 +348,14 @@ def init_attention(key, cfg: ArchConfig):
 
 
 def apply_attention(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
-                    cache_offset=None, window=None, prefix_len=None):
+                    cache_offset=None, window=None, prefix_len=None,
+                    block_tables=None):
     """x: [B,T,D]. Returns (out [B,T,D], new_kv or None).
 
     kv_cache: dict(k=[B,S,Hkv,Dh], v=...) pre-allocated ring for decode;
-    cache_offset: scalar current length (tokens already in cache)."""
+    cache_offset: scalar current length (tokens already in cache).
+    block_tables: paged mode — kv_cache leaves are pools [N, bs, Hkv, Dh]
+    and [B, n] tables map virtual positions onto physical blocks."""
     B, T, D = x.shape
     H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = dense(p["wq"], x).reshape(B, T, H, Dh)
@@ -314,9 +376,19 @@ def apply_attention(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
                           attn_cap=cfg.attn_softcap, chunk_q=chunk_q)
         new_kv = {"k": k, "v": v}
     else:
-        S = kv_cache["k"].shape[1]
-        k_all = _cache_update(kv_cache["k"], k, cache_offset)
-        v_all = _cache_update(kv_cache["v"], v, cache_offset)
+        if block_tables is not None:
+            k_pool = paged_scatter(kv_cache["k"], k, block_tables,
+                                   cache_offset)
+            v_pool = paged_scatter(kv_cache["v"], v, block_tables,
+                                   cache_offset)
+            k_all = paged_gather(k_pool, block_tables)
+            v_all = paged_gather(v_pool, block_tables)
+            new_kv = {"k": k_pool, "v": v_pool}
+        else:
+            k_all = _cache_update(kv_cache["k"], k, cache_offset)
+            v_all = _cache_update(kv_cache["v"], v, cache_offset)
+            new_kv = {"k": k_all, "v": v_all}
+        S = k_all.shape[1]
         pos_k = jnp.arange(S, dtype=jnp.int32)[None, :]
         pos_q = positions if positions.ndim > 1 else positions[None, :]
         # prefill (T>1): blocked attention with static causal extents;
@@ -326,7 +398,6 @@ def apply_attention(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
         o = gqa_attention(q, k_all, v_all, pos_q=pos_q, pos_k=pos_k,
                           causal=True, window=window, prefix_len=prefix_len,
                           attn_cap=cfg.attn_softcap, chunk_q=chunk_q)
-        new_kv = {"k": k_all, "v": v_all}
     out = dense(p["wo"], o.reshape(B, T, H * Dh))
     return out, new_kv
 
@@ -355,8 +426,9 @@ def init_mla(key, cfg: ArchConfig):
 
 
 def apply_mla(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
-              cache_offset=None):
-    """Latent-cache MLA. Cache stores (c_kv, k_rope): [B,S,kv_lora(+rope)]."""
+              cache_offset=None, block_tables=None):
+    """Latent-cache MLA. Cache stores (c_kv, k_rope): [B,S,kv_lora(+rope)];
+    paged mode pools them as [N, bs, ...] addressed via block_tables."""
     m: MLAConfig = cfg.mla
     B, T, D = x.shape
     H = cfg.num_heads
@@ -373,8 +445,18 @@ def apply_mla(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
                         cfg.rope_theta)                       # [B,T,1,dr]
 
     if kv_cache is not None:
-        c_kv = _cache_update(kv_cache["c_kv"], c_kv, cache_offset)
-        k_rope = _cache_update(kv_cache["k_rope"], k_rope, cache_offset)
+        if block_tables is not None:
+            ckv_pool = paged_scatter(kv_cache["c_kv"], c_kv, block_tables,
+                                     cache_offset)
+            kr_pool = paged_scatter(kv_cache["k_rope"], k_rope, block_tables,
+                                    cache_offset)
+            new_cache = {"c_kv": ckv_pool, "k_rope": kr_pool}
+            c_kv = paged_gather(ckv_pool, block_tables)
+            k_rope = paged_gather(kr_pool, block_tables)
+        else:
+            c_kv = _cache_update(kv_cache["c_kv"], c_kv, cache_offset)
+            k_rope = _cache_update(kv_cache["k_rope"], k_rope, cache_offset)
+            new_cache = {"c_kv": c_kv, "k_rope": k_rope}
         S = c_kv.shape[1]
         pos_k = jnp.arange(S, dtype=jnp.int32)[None, :]
         pos_q = positions if positions.ndim > 1 else positions[None, :]
@@ -382,6 +464,7 @@ def apply_mla(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
         S = T
         pos_k = positions
         pos_q = positions
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
 
     # decode uses the ABSORBED-WEIGHT form (DeepSeek inference trick): score
     # and output projections fold W_uk/W_uv into q/o so K/V are NEVER
@@ -391,7 +474,7 @@ def apply_mla(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
         o = _mla_absorbed_decode(p, cfg, q_nope, q_rope, c_kv, k_rope,
                                  cache_offset)
         out = dense(p["wo"], o.reshape(B, T, H * dv))
-        return out, {"c_kv": c_kv, "k_rope": k_rope}
+        return out, new_cache
 
     up = dense(p["kv_up"], c_kv).reshape(B, S, H, dn + dv)
     k_nope, v = up[..., :dn], up[..., dn:]
@@ -408,8 +491,6 @@ def apply_mla(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
                       attn_cap=None, scale=1.0 / math.sqrt(dn + dr),
                       chunk_q=chunk_q)
     out = dense(p["wo"], o.reshape(B, T, H * dv))
-    new_cache = {"c_kv": c_kv, "k_rope": k_rope} if kv_cache is not None \
-        else {"c_kv": c_kv, "k_rope": k_rope}
     return out, new_cache
 
 

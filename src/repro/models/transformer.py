@@ -104,7 +104,7 @@ def init_block(key, cfg: ArchConfig, kind: str):
 
 
 def apply_block(p, cfg: ArchConfig, kind: str, h, *, positions,
-                cache=None, offset=None, prefix_len=None):
+                cache=None, offset=None, prefix_len=None, block_tables=None):
     """Returns (h, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     if kind in XLSTM_KINDS:
@@ -120,10 +120,12 @@ def apply_block(p, cfg: ArchConfig, kind: str, h, *, positions,
         window = cfg.sliding_window if kind == "local" else None
         mix, new_cache = L.apply_attention(
             p["attn"], cfg, x, positions=positions, kv_cache=cache,
-            cache_offset=offset, window=window, prefix_len=prefix_len)
+            cache_offset=offset, window=window, prefix_len=prefix_len,
+            block_tables=block_tables)
     elif kind in MLA_KINDS:
         mix, new_cache = L.apply_mla(p["attn"], cfg, x, positions=positions,
-                                     kv_cache=cache, cache_offset=offset)
+                                     kv_cache=cache, cache_offset=offset,
+                                     block_tables=block_tables)
     else:  # mamba
         mix, new_cache = S.mamba_forward(p["mamba"], cfg, x, cache)
     if sandwich:
@@ -186,6 +188,23 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int):
             lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape).copy(),
             unit_cache))
     return caches
+
+
+def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int):
+    """Pooled paged cache: every leaf is [reps, num_blocks, block_size, ...].
+
+    Structurally this is ``init_cache`` with (batch=num_blocks,
+    max_len=block_size) — axis 1 is the PHYSICAL BLOCK dim and axis 2 the
+    position-in-block dim; block tables map each slot's virtual positions
+    onto it.  Positional caches (attention / MLA) only: a recurrent state
+    has no positions to page."""
+    for unit, _reps in cfg.segments():
+        for kind in unit:
+            if kind not in ATTN_KINDS and kind not in MLA_KINDS:
+                raise ValueError(
+                    f"{cfg.name}: layer kind {kind!r} has a recurrent "
+                    "cache; the paged backend supports attention/MLA only")
+    return init_cache(cfg, num_blocks, block_size)
 
 
 # ---------------------------------------------------------------------------
@@ -258,7 +277,7 @@ def _embed(params, cfg: ArchConfig, tokens, frontend_embeds=None,
 
 
 def _run_segments(params, cfg: ArchConfig, h, *, positions, caches=None,
-                  offset=None, prefix_len=None):
+                  offset=None, prefix_len=None, block_tables=None):
     """Scan each segment's stacked unit over its repeats."""
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -274,7 +293,8 @@ def _run_segments(params, cfg: ArchConfig, h, *, positions, caches=None,
                 c = None if c_unit is None else c_unit[f"l{j}"]
                 h, nc, aux = apply_block(
                     p_unit[f"l{j}"], cfg, kind, h, positions=positions,
-                    cache=c, offset=offset, prefix_len=prefix_len)
+                    cache=c, offset=offset, prefix_len=prefix_len,
+                    block_tables=block_tables)
                 new_c[f"l{j}"] = nc
                 aux_sum = aux_sum + aux
             return ACT.hidden(h), (new_c, aux_sum)
@@ -419,10 +439,12 @@ def prefill(params, cfg: ArchConfig, tokens, cache, frontend_embeds=None):
     return _head(params, cfg, h_last), new_caches, jnp.array(T, jnp.int32)
 
 
-def decode_step(params, cfg: ArchConfig, token, cache, offset):
+def decode_step(params, cfg: ArchConfig, token, cache, offset,
+                block_tables=None):
     """token: [B,1] ints; offset: tokens-already-cached — a scalar shared by
     the batch, or a per-row [B] vector (serve slots at independent lengths
-    inside one batched decode step)."""
+    inside one batched decode step).  ``block_tables`` [B, n] switches the
+    cache to the paged layout (pooled leaves, see ``init_paged_cache``)."""
     B = token.shape[0]
     off = jnp.asarray(offset)
     if off.ndim == 1:
@@ -431,13 +453,14 @@ def decode_step(params, cfg: ArchConfig, token, cache, offset):
         positions = jnp.broadcast_to(off[None, None], (B, 1)).astype(jnp.int32)
     h = _embed(params, cfg, token, positions=positions)
     h, new_caches, _ = _run_segments(params, cfg, h, positions=positions,
-                                     caches=cache, offset=offset)
+                                     caches=cache, offset=offset,
+                                     block_tables=block_tables)
     h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
     return _head(params, cfg, h), new_caches
 
 
 def prefill_chunk(params, cfg: ArchConfig, tokens, cache, offset,
-                  with_logits: bool = True):
+                  with_logits: bool = True, block_tables=None):
     """Write a prompt chunk at cache positions [offset, offset+T).
 
     The serve engine's chunked-admission primitive: a fixed-shape [B,T]
@@ -465,7 +488,8 @@ def prefill_chunk(params, cfg: ArchConfig, tokens, cache, offset,
     positions = jnp.broadcast_to(positions, (B, T))
     h = _embed(params, cfg, tokens, positions=positions)
     h, new_caches, _ = _run_segments(params, cfg, h, positions=positions,
-                                     caches=cache, offset=off)
+                                     caches=cache, offset=off,
+                                     block_tables=block_tables)
     if not with_logits:
         return None, new_caches
     h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
@@ -499,3 +523,15 @@ def reset_slot(cache, slot):
     """Zero one slot's rows in every cache leaf, other slots untouched."""
     return jax.tree.map(lambda x: x.at[:, slot].set(jnp.zeros((), x.dtype)),
                         cache)
+
+
+def copy_block(cache, src, dst):
+    """Copy one physical block's payload in every paged-cache leaf
+    (leaf [reps, num_blocks, block_size, ...], axis 1 = block).  The
+    device half of copy-on-write: the allocator hands out a private block
+    id and this clones the shared content into it before any write.
+    Traced src/dst (jit-stable)."""
+    def cp(x):
+        blk = lax.dynamic_slice_in_dim(x, src, 1, axis=1)
+        return lax.dynamic_update_slice_in_dim(x, blk, dst, axis=1)
+    return jax.tree.map(cp, cache)

@@ -1,16 +1,22 @@
 """Continuous-batching serve subsystem.
 
-A fixed pool of decode slots over the shared ring KV cache; queued requests
-are admitted into slots the moment EOS (or the per-request token budget)
-frees them, with chunked prefill interleaved between decode steps.
+A fixed pool of decode slots over one shared KV cache; queued requests are
+admitted into slots the moment capacity frees, with chunked prefill
+interleaved between decode steps.  Two KV backends sit behind the same
+engine interface: contiguous per-slot rows (slot-count admission) and
+paged blocks (block-count admission, prefix sharing, preemption).
 
   engine.ServeEngine    the continuous-batching core (jit-stable decode)
   engine.serve_waves    the wave-at-a-time baseline (for A/B benchmarks)
+  blocks.BlockAllocator paged-KV host allocator (free list, refcounts,
+                        prefix index, copy-on-write)
   slots.SlotTable       host-side slot bookkeeping mirroring device state
   queue.RequestQueue    arrival-time-gated admission queue + generators
-  metrics.ServeMetrics  per-request TTFT, per-step throughput, occupancy
+  metrics.ServeMetrics  per-request TTFT, per-step throughput, occupancy,
+                        prefix hit-rate and block-pool gauges
 """
 
+from .blocks import BlockAllocator, NoFreeBlocks, SENTINEL  # noqa: F401
 from .engine import EngineConfig, ServeEngine, serve_waves  # noqa: F401
 from .metrics import ServeMetrics  # noqa: F401
 from .queue import (Request, RequestQueue, poisson_arrivals,  # noqa: F401

@@ -1,11 +1,11 @@
-"""Continuous-batching serve engine with slot-level admission.
+"""Continuous-batching serve engine with slot-level admission and a
+pluggable KV backend (contiguous rows or paged blocks).
 
 The wave-based loop this replaces admitted B requests, decoded until the
 whole wave drained, and only then admitted again — freed slots idled behind
 the wave's straggler.  Here a fixed pool of ``max_slots`` decode slots runs
-over one shared ring KV cache (the slot index IS the cache batch row) and a
-queued request is admitted the moment EOS or the per-request budget frees a
-slot:
+over one shared KV cache and a queued request is admitted the moment EOS or
+the per-request budget frees a slot:
 
   * **jit-stable decode**: every decode step is one compiled call over the
     full [S] slot batch — fixed slot count, per-slot cache offsets (the
@@ -14,16 +14,40 @@ slot:
     Slot churn never recompiles anything.
   * **chunked admission prefill**: prompts stream through one compiled
     [1, prefill_chunk] function (``transformer.prefill_chunk``) into the
-    admitted slot's cache row, interleaved between decode steps so ongoing
+    admitted slot's cache, interleaved between decode steps so ongoing
     decodes keep making progress while newcomers prefill.
   * **single RNG split discipline**: token t of request r is sampled with
     ``fold_in(fold_in(seed_key, r), t)`` — including the FIRST token (the
     wave-era loop sampled it from the unsplit top-level key).  Sampling is
     deterministic per request, independent of slot assignment, admission
-    order, or pool size.
+    order, pool size, KV backend, or preemption.
   * **mesh composition**: given a 1-axis ("data",) mesh the slot batch dim
-    of the cache and every per-step input shards across devices; params are
-    replicated (serve-style), activations follow ``act_sharding``.
+    of every per-step input shards across devices; params are replicated
+    (serve-style), activations follow ``act_sharding``.
+
+Two KV backends hide behind one cache interface (``EngineConfig.kv_mode``):
+
+  * ``contiguous`` — one ``max_len`` cache row per slot (the slot index IS
+    the cache batch row); admission is free-slot driven.  Simple, but HBM
+    caps concurrency at ``pool_positions / max_len`` even when requests
+    use a fraction of their reservation.
+  * ``paged`` — one pooled tensor of ``kv_blocks`` × ``block_size``
+    positions per cache leaf; each slot maps virtual positions onto
+    physical blocks through a block table (``blocks.BlockAllocator`` owns
+    the host bookkeeping).  Admission is free-BLOCK driven, identical
+    prompt prefixes share refcounted blocks (copy-on-write when a shared
+    block must be rewritten), and when the pool runs dry mid-decode the
+    YOUNGEST request is preempted: its blocks are freed and the request
+    requeued — the fold-in RNG regenerates its tokens exactly on re-serve,
+    so preemption is invisible in outputs.
+
+    Token identity with the contiguous backend holds by construction:
+    ``max_len % block_size == 0`` makes the gathered virtual KV view the
+    same shape AND the same values as a contiguous row, and prefix-cache
+    hits are rounded down to the prefill-chunk grid so chunk boundaries —
+    hence the cached k/v content — match a from-scratch prefill (the
+    paged suite and serve benchmarks assert exact token identity end to
+    end).
 
 ``serve_waves`` keeps the old wave-at-a-time loop alive as the measured
 baseline for ``benchmarks/serve_bench.py``.
@@ -43,9 +67,10 @@ from repro.configs.base import ArchConfig
 from repro.models import transformer as T
 from repro.models.transformer import ATTN_KINDS, MLA_KINDS
 
+from .blocks import BlockAllocator, NoFreeBlocks
 from .metrics import ServeMetrics
 from .queue import Request, RequestQueue
-from .slots import SlotTable
+from .slots import ACTIVE, PREFILL, SlotTable
 
 
 @dataclass(frozen=True)
@@ -53,12 +78,16 @@ class EngineConfig:
     """Engine knobs (everything the serve CLI exposes lands here)."""
 
     max_slots: int = 8
-    max_len: int = 256           # cache positions per slot (prompt + gen)
+    max_len: int = 256           # cache positions per request (prompt + gen)
     prefill_chunk: int = 16      # admission prefill chunk length
     chunks_per_step: int = 1     # prefill chunks interleaved per decode step
     temperature: float = 0.0
     eos_id: Optional[int] = None
     seed: int = 0
+    kv_mode: str = "contiguous"  # "contiguous" | "paged"
+    block_size: int = 16         # paged: positions per physical block
+    kv_blocks: int = 0           # paged: pool size (0 = match contiguous
+                                 # capacity: 1 + max_slots * max_len / bs)
 
 
 def _check_arch(cfg: ArchConfig, *, allow_recurrent: bool = False) -> None:
@@ -108,7 +137,7 @@ def _make_sampler(base_key, temperature: float):
 
 
 class ServeEngine:
-    """Fixed slot pool + shared ring KV cache + admission queue."""
+    """Fixed slot pool + shared KV cache (contiguous or paged) + queue."""
 
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig,
                  mesh=None):
@@ -120,10 +149,30 @@ class ServeEngine:
             raise ValueError("chunks_per_step must be >= 1")
         if ecfg.prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if ecfg.kv_mode not in ("contiguous", "paged"):
+            raise ValueError(f"unknown kv_mode {ecfg.kv_mode!r}")
+        self.paged = ecfg.kv_mode == "paged"
         # a padded chunk must fit the cache row (a clamped dynamic-slice
         # write would silently shift over live positions)
         self._chunk = min(ecfg.prefill_chunk, ecfg.max_len)
-        self.table = SlotTable(ecfg.max_slots, ecfg.max_len)
+
+        if self.paged:
+            bs = ecfg.block_size
+            if ecfg.max_len % bs:
+                raise ValueError(
+                    f"paged mode needs max_len ({ecfg.max_len}) divisible "
+                    f"by block_size ({bs}): the gathered virtual KV view "
+                    "must match the contiguous row shape bit-for-bit")
+            nblocks = ecfg.kv_blocks or (
+                1 + ecfg.max_slots * (ecfg.max_len // bs))
+            self.allocator: Optional[BlockAllocator] = \
+                BlockAllocator(nblocks, bs)
+            self.table = SlotTable(ecfg.max_slots, ecfg.max_len,
+                                   block_size=bs)
+        else:
+            self.allocator = None
+            self.table = SlotTable(ecfg.max_slots, ecfg.max_len)
+
         self.queue = RequestQueue()
         self.metrics = ServeMetrics(max_slots=ecfg.max_slots)
         self.results: Dict[int, List[int]] = {}
@@ -143,32 +192,62 @@ class ServeEngine:
                 lambda _: replicated, params))
         self.params = params
 
-        cache = T.init_cache(cfg, ecfg.max_slots, ecfg.max_len)
-        if self._data_spec is not None:
-            # cache leaves are [reps, S, ...]: slot batch dim is axis 1
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            cache = jax.tree.map(
-                lambda x: jax.device_put(x, NamedSharding(
-                    mesh, P(None, "data", *([None] * (x.ndim - 2))))), cache)
+        if self.paged:
+            cache = T.init_paged_cache(cfg, self.allocator.num_blocks,
+                                       ecfg.block_size)
+            if mesh is not None:
+                # the pooled leaves have no slot dim: replicate them and
+                # let the data-sharded per-step inputs drive the layout
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                replicated = NamedSharding(mesh, P())
+                cache = jax.tree.map(
+                    lambda x: jax.device_put(x, replicated), cache)
+        else:
+            cache = T.init_cache(cfg, ecfg.max_slots, ecfg.max_len)
+            if self._data_spec is not None:
+                # cache leaves are [reps, S, ...]: slot batch dim is axis 1
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                cache = jax.tree.map(
+                    lambda x: jax.device_put(x, NamedSharding(
+                        mesh, P(None, "data", *([None] * (x.ndim - 2))))),
+                    cache)
         self.cache = cache
 
-        self._decode = jax.jit(
-            lambda p, tok, c, off: T.decode_step(p, cfg, tok, c, off))
+        if self.paged:
+            self._decode = jax.jit(
+                lambda p, tok, c, off, bt: T.decode_step(
+                    p, cfg, tok, c, off, block_tables=bt))
+
+            # admission prefill addresses the pool through the slot's own
+            # [1, n_max] table row — no slot slicing needed
+            def admit_paged(with_logits):
+                def fn(p, c, tokens, offset, table):
+                    return T.prefill_chunk(p, cfg, tokens, c, offset,
+                                           with_logits=with_logits,
+                                           block_tables=table)
+                return jax.jit(fn)
+            self._admit = admit_paged(True)
+            self._admit_quiet = admit_paged(False)
+            self._copy = jax.jit(T.copy_block)
+        else:
+            self._decode = jax.jit(
+                lambda p, tok, c, off: T.decode_step(p, cfg, tok, c, off))
+            # admission: slice the slot's row, prefill one chunk into it,
+            # write it back — one compiled function per variant, traced slot
+            # index.  Interior chunks only feed the cache, so they skip the
+            # full-vocab head projection (the dominant admission FLOPs at
+            # real vocab sizes)
+            def admit(with_logits):
+                def fn(p, c, tokens, slot, offset):
+                    sub = T.take_slot(c, slot)
+                    logits, sub = T.prefill_chunk(
+                        p, cfg, tokens, sub, offset, with_logits=with_logits)
+                    return logits, T.write_slot(c, sub, slot)
+                return jax.jit(fn)
+            self._admit = admit(True)
+            self._admit_quiet = admit(False)
+            self._reset = jax.jit(T.reset_slot)
         self._sample = jax.jit(_make_sampler(self._key, ecfg.temperature))
-        # admission: slice the slot's row, prefill one chunk into it, write
-        # it back — one compiled function per variant, traced slot index.
-        # Interior chunks only feed the cache, so they skip the full-vocab
-        # head projection (the dominant admission FLOPs at real vocab sizes)
-        def admit(with_logits):
-            def fn(p, c, tokens, slot, offset):
-                sub = T.take_slot(c, slot)
-                logits, sub = T.prefill_chunk(p, cfg, tokens, sub, offset,
-                                              with_logits=with_logits)
-                return logits, T.write_slot(c, sub, slot)
-            return jax.jit(fn)
-        self._admit = admit(True)
-        self._admit_quiet = admit(False)
-        self._reset = jax.jit(T.reset_slot)
 
     def _put(self, x):
         if self._data_spec is None:
@@ -187,9 +266,119 @@ class ServeEngine:
                 raise ValueError(
                     f"request {r.req_id}: prompt+gen {need} exceeds "
                     f"max_len {self.ecfg.max_len}")
+            if self.paged:
+                # the last decode write lands at position prompt+gen-2, so
+                # a lone request must fit the pool or it would preempt
+                # itself forever
+                worst = (len(r.prompt) + r.max_new_tokens - 2) \
+                    // self.allocator.block_size + 1
+                if worst > self.allocator.capacity:
+                    raise ValueError(
+                        f"request {r.req_id}: worst case {worst} blocks "
+                        f"exceeds the pool ({self.allocator.capacity} "
+                        "usable blocks)")
         for r in requests:
             self.metrics.on_submit(r.req_id, r.arrival_s, len(r.prompt))
         self.queue.submit(requests)
+
+    # -- paged-backend plumbing -------------------------------------------
+    def _record_blocks(self) -> None:
+        self.metrics.on_blocks(self.allocator.num_used,
+                               self.allocator.capacity)
+
+    def _preempt(self, victim) -> None:
+        """Free the victim's blocks and send its request back to the queue.
+        The fold-in RNG regenerates its tokens exactly on re-serve, so the
+        only trace is the ``preemptions`` counter (and the wasted steps)."""
+        req = victim.request
+        self.allocator.free_blocks(victim.blocks)
+        victim.blocks = []
+        self.table.release(victim)
+        self.metrics.on_preempt(req.req_id)
+        self.queue.submit(req)
+        self._record_blocks()
+
+    def _make_room(self, slot) -> bool:
+        """The pool is dry: preempt the youngest busy request.  Returns
+        False when the victim was ``slot`` itself (the caller must stop
+        touching it)."""
+        victim = self.table.youngest_busy()
+        if victim is slot and len(self.table.busy()) == 1:
+            # cannot happen given submit()'s worst-case validation, but
+            # fail loudly rather than spin
+            raise RuntimeError("KV pool too small for the only live request")
+        self._preempt(victim)
+        return victim is not slot
+
+    def _alloc_block(self, slot) -> Optional[int]:
+        """Allocate one block for ``slot``, preempting the youngest busy
+        request while the pool is dry.  Returns None when ``slot`` itself
+        was the youngest and got preempted."""
+        while True:
+            try:
+                return self.allocator.alloc()
+            except NoFreeBlocks:
+                if not self._make_room(slot):
+                    return None
+
+    def _ensure_writable(self, slot, block_idx: int,
+                         need_copy: bool = True) -> bool:
+        """Copy-on-write: make ``slot.blocks[block_idx]`` private before a
+        write (``allocator.cow`` forks the host side, ``copy_block`` clones
+        the device payload — skipped when the imminent write overwrites
+        the whole block anyway).  Returns False if ``slot`` was preempted
+        while making room for the copy."""
+        while True:
+            blk = slot.blocks[block_idx]
+            try:
+                new, copied = self.allocator.cow(blk)
+            except NoFreeBlocks:
+                if not self._make_room(slot):
+                    return False
+                continue        # a preemption may even have unshared blk
+            if copied:
+                if need_copy:
+                    self.cache = self._copy(self.cache, blk, new)
+                slot.blocks[block_idx] = new
+            return True
+
+    def _ensure_writable_range(self, slot, lo: int, hi: int) -> bool:
+        """COW every allocated block covering positions [lo, hi); blocks
+        fully inside the range skip the device copy (every position is
+        about to be rewritten)."""
+        bs = self.allocator.block_size
+        for bi in range(lo // bs, min(-(-hi // bs), len(slot.blocks))):
+            full = lo <= bi * bs and (bi + 1) * bs <= hi
+            if not self._ensure_writable(slot, bi, need_copy=not full):
+                return False
+        return True
+
+    def _try_admit_paged(self, slot, req) -> bool:
+        """Map the request's prompt onto blocks: prefix-cache hits share
+        published blocks (refcounted), the tail gets fresh ones.  Fails
+        (False) when the free list cannot cover the tail — the caller
+        requeues the request and stops admitting this step."""
+        alloc = self.allocator
+        bs = alloc.block_size
+        plen = len(req.prompt)
+        matched = alloc.match_prefix(req.prompt)        # increfs
+        fresh_needed = alloc.blocks_for(plen) - len(matched)
+        if fresh_needed > alloc.num_free:
+            alloc.free_blocks(matched)
+            return False
+        # prefill restarts on the chunk grid so every chunk has the same
+        # shape — hence bit-identical k/v — as a from-scratch prefill; the
+        # cap at the last grid point below plen guarantees the final chunk
+        # still produces the first token's logits
+        C = self._chunk
+        pos0 = min((len(matched) * bs // C) * C, ((plen - 1) // C) * C)
+        self.table.assign(slot, req)
+        slot.blocks = matched + [alloc.alloc() for _ in range(fresh_needed)]
+        slot.prefill_pos = pos0
+        self.metrics.on_admit(req.req_id)
+        self.metrics.on_prefix_lookup(pos0, plen)
+        self._record_blocks()
+        return True
 
     # -- engine phases (one call each per step) ---------------------------
     def _admit_ready(self, now_s: float) -> None:
@@ -197,13 +386,25 @@ class ServeEngine:
             req = self.queue.pop_ready(now_s)
             if req is None:
                 return
-            self.table.assign(slot, req)
-            self.cache = self._reset(self.cache, slot.index)
-            self.metrics.on_admit(req.req_id)
+            if self.paged:
+                if not self._try_admit_paged(slot, req):
+                    # not enough free blocks: put the request back (the
+                    # queue re-sorts it into place) and keep FIFO order by
+                    # not admitting anyone behind it
+                    self.queue.submit(req)
+                    return
+            else:
+                self.table.assign(slot, req)
+                self.cache = self._reset(self.cache, slot.index)
+                self.metrics.on_admit(req.req_id)
 
     def _finish(self, slot) -> None:
         req = slot.request
         self.results[req.req_id] = list(slot.output)
+        if self.paged:
+            self.allocator.free_blocks(slot.blocks)
+            slot.blocks = []
+            self._record_blocks()
         self.table.release(slot)
         self.metrics.on_finish(req.req_id)
 
@@ -224,12 +425,19 @@ class ServeEngine:
         ragged TAIL chunk is RIGHT-ALIGNED at ``plen - chunk``, re-writing
         the overlap with bit-identical k/v (k/v at a position depend only
         on its token, its position, and the already-written prefix).
+
+        Paged mode starts at the prefix-cache hit point (chunk-grid
+        aligned, so the geometry — and the written bits — match the
+        contiguous backend exactly); a tail chunk that dips into shared
+        blocks copy-on-writes them first.
         """
         C = self._chunk
         budget = self.ecfg.chunks_per_step
         for slot in self.table.prefilling():
             if budget <= 0:
                 return
+            if slot.state != PREFILL:   # preempted earlier this tick
+                continue
             prompt = np.asarray(slot.request.prompt, np.int32)
             plen = len(prompt)
             remaining = plen - slot.prefill_pos
@@ -245,9 +453,17 @@ class ServeEngine:
                 chunk[0] = prompt[start:plen]
             final = remaining <= C
             admit = self._admit if final else self._admit_quiet
-            logits, self.cache = admit(
-                self.params, self.cache, jnp.asarray(chunk),
-                slot.index, start)
+            if self.paged:
+                if not self._ensure_writable_range(slot, start, start + C):
+                    continue                    # preempted mid-COW
+                logits, self.cache = admit(
+                    self.params, self.cache, jnp.asarray(chunk),
+                    jnp.asarray(start, jnp.int32),
+                    jnp.asarray(self.table.block_table_row(slot)))
+            else:
+                logits, self.cache = admit(
+                    self.params, self.cache, jnp.asarray(chunk),
+                    slot.index, start)
             slot.prefill_pos += remaining if remaining <= C else C
             slot.length = slot.prefill_pos
             self.metrics.on_prefill_chunk(min(remaining, C))
@@ -260,16 +476,48 @@ class ServeEngine:
                     row, jnp.asarray([slot.req_id], jnp.int32),
                     jnp.asarray([0], jnp.int32))[0])
                 self.table.activate(slot, tok)
+                if self.paged:
+                    # publish the full prompt blocks so identical prompts
+                    # admitted later share them (first writer wins)
+                    keys = self.allocator.prefix_keys(slot.request.prompt)
+                    for i, key in enumerate(keys):
+                        self.allocator.publish(slot.blocks[i], key)
                 self.metrics.on_first_token(slot.req_id)
                 self._complete_if_done(slot, tok)
 
+    def _grow_decode_blocks(self) -> None:
+        """Paged: every ACTIVE slot writes its pending token at position
+        ``length`` this step — allocate the covering block when the write
+        crosses into a new one, preempting the youngest request while the
+        pool is dry (oldest slots grow first, so preemption pressure lands
+        on the newest work)."""
+        bs = self.allocator.block_size
+        for slot in sorted(self.table.active(), key=lambda s: s.admit_seq):
+            if slot.state != ACTIVE:    # preempted by an earlier growth
+                continue
+            while slot.state == ACTIVE and slot.length // bs == \
+                    len(slot.blocks):
+                blk = self._alloc_block(slot)
+                if blk is None:         # slot itself was the victim
+                    break
+                slot.blocks.append(blk)
+        self._record_blocks()
+
     def _decode_tick(self) -> None:
+        if self.paged:
+            self._grow_decode_blocks()
         if self.table.n_active == 0:
             return
         tokens, offsets, active, req_ids, tok_idx = self.table.decode_inputs()
-        logits, self.cache = self._decode(
-            self.params, self._put(jnp.asarray(tokens)), self.cache,
-            self._put(jnp.asarray(offsets)))
+        if self.paged:
+            logits, self.cache = self._decode(
+                self.params, self._put(jnp.asarray(tokens)), self.cache,
+                self._put(jnp.asarray(offsets)),
+                self._put(jnp.asarray(self.table.block_tables())))
+        else:
+            logits, self.cache = self._decode(
+                self.params, self._put(jnp.asarray(tokens)), self.cache,
+                self._put(jnp.asarray(offsets)))
         toks = np.asarray(self._sample(
             logits[:, 0], self._put(jnp.asarray(req_ids)),
             self._put(jnp.asarray(tok_idx))))

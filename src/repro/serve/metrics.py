@@ -46,6 +46,14 @@ class ServeMetrics:
     decode_tokens: int = 0           # tokens produced by decode steps
     prefill_chunks: int = 0
     prefill_tokens: int = 0
+    peak_active: int = 0             # max live slots in any decode step
+    # paged-KV gauges (stay 0 for the contiguous backend):
+    prefix_hit_tokens: int = 0       # prompt tokens served from shared blocks
+    prefix_lookup_tokens: int = 0    # prompt tokens that went through lookup
+    blocks_in_use: int = 0           # current allocated blocks
+    blocks_peak: int = 0             # high-water mark
+    blocks_total: int = 0            # pool capacity (sentinel excluded)
+    preemptions: int = 0             # preempt-and-requeue events
     _t0: Optional[float] = None
     wall_s: float = 0.0
 
@@ -81,6 +89,7 @@ class ServeMetrics:
         self.decode_steps += 1
         self.active_slot_steps += n_active
         self.decode_tokens += n_active
+        self.peak_active = max(self.peak_active, n_active)
 
     def on_token(self, req_id: int) -> None:
         self.requests[req_id].tokens_out += 1
@@ -88,10 +97,41 @@ class ServeMetrics:
     def on_finish(self, req_id: int) -> None:
         self.requests[req_id].finished_s = self.now()
 
+    def on_prefix_lookup(self, hit_tokens: int, total_tokens: int) -> None:
+        """One admission's prefix-cache outcome: ``hit_tokens`` of the
+        ``total_tokens``-long prompt were served from shared blocks."""
+        self.prefix_hit_tokens += hit_tokens
+        self.prefix_lookup_tokens += total_tokens
+
+    def on_blocks(self, in_use: int, total: int) -> None:
+        """Block-pool gauge sample (paged backend)."""
+        self.blocks_in_use = in_use
+        self.blocks_peak = max(self.blocks_peak, in_use)
+        self.blocks_total = total
+
+    def on_preempt(self, req_id: int) -> None:
+        """A mid-flight request lost its blocks and went back to the queue:
+        its per-request record restarts (tokens regenerate exactly on
+        re-serve — the fold-in RNG makes the retry invisible in outputs),
+        only the ``preemptions`` counter remembers the wasted work."""
+        self.preemptions += 1
+        r = self.requests[req_id]
+        r.admitted_s = None
+        r.first_token_s = None
+        r.finished_s = None
+        r.tokens_out = 0
+
     # -- aggregates -------------------------------------------------------
     @property
     def tokens_out(self) -> int:
         return sum(r.tokens_out for r in self.requests.values())
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of looked-up prompt tokens served from shared blocks."""
+        if self.prefix_lookup_tokens == 0:
+            return 0.0
+        return self.prefix_hit_tokens / self.prefix_lookup_tokens
 
     @property
     def occupancy(self) -> float:
@@ -129,8 +169,15 @@ class ServeMetrics:
             "decode_steps": self.decode_steps,
             "tokens_per_step": self.tokens_per_step,
             "occupancy": self.occupancy,
+            "peak_active": self.peak_active,
             "prefill_chunks": self.prefill_chunks,
             "prefill_tokens": self.prefill_tokens,
+            "prefix_hit_rate": self.prefix_hit_rate,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "blocks_in_use": self.blocks_in_use,
+            "blocks_peak": self.blocks_peak,
+            "blocks_total": self.blocks_total,
+            "preemptions": self.preemptions,
             "ttft_mean_s": (sum(ttfts) / len(ttfts)) if ttfts else float("nan"),
             "ttft_p50_s": self._pct(ttfts, 0.50),
             "ttft_p95_s": self._pct(ttfts, 0.95),
@@ -140,16 +187,29 @@ class ServeMetrics:
 
     def report(self) -> str:
         s = self.summary()
-        return (
+        lines = [
             f"requests : {s['completed']:.0f}/{s['requests']:.0f} completed, "
-            f"{s['tokens_out']:.0f} tokens out\n"
+            f"{s['tokens_out']:.0f} tokens out",
             f"decode   : {s['decode_steps']:.0f} steps, "
             f"{s['tokens_per_step']:.2f} tok/step, "
-            f"occupancy {s['occupancy'] * 100:.1f}%\n"
+            f"occupancy {s['occupancy'] * 100:.1f}%, "
+            f"peak {s['peak_active']:.0f} slots",
             f"prefill  : {s['prefill_chunks']:.0f} chunks, "
-            f"{s['prefill_tokens']:.0f} tokens\n"
+            f"{s['prefill_tokens']:.0f} tokens",
+        ]
+        if s["blocks_total"]:
+            lines.append(
+                f"paged    : prefix hit-rate "
+                f"{s['prefix_hit_rate'] * 100:.1f}% "
+                f"({s['prefix_hit_tokens']:.0f} tokens), blocks "
+                f"{s['blocks_in_use']:.0f}/{s['blocks_total']:.0f} "
+                f"(peak {s['blocks_peak']:.0f}), "
+                f"preemptions {s['preemptions']:.0f}")
+        lines += [
             f"ttft     : mean {s['ttft_mean_s'] * 1e3:.1f} ms, "
             f"p50 {s['ttft_p50_s'] * 1e3:.1f} ms, "
-            f"p95 {s['ttft_p95_s'] * 1e3:.1f} ms\n"
+            f"p95 {s['ttft_p95_s'] * 1e3:.1f} ms",
             f"wall     : {s['wall_s']:.2f} s, "
-            f"{s['tokens_per_s']:.0f} tok/s")
+            f"{s['tokens_per_s']:.0f} tok/s",
+        ]
+        return "\n".join(lines)

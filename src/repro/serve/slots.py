@@ -8,13 +8,21 @@ device inputs once per step by ``decode_inputs``.
 Slot lifecycle:
 
     FREE ──assign──▶ PREFILL ──(last chunk, first token)──▶ ACTIVE
-      ▲                                                        │
+      ▲                │                                       │
+      │                └───────────── preempt ─────────────────┤
       └──────────────── release (EOS / budget) ◀───────────────┘
 
 Inactive rows still flow through the batched decode step (masked): their
-token input is 0 and their write offset is the cache sentinel ``max_len-1``
-— a position the causal mask hides until the moment a live request writes
-its own token there, so garbage never leaks into any slot's attention.
+token input is 0 and their write offset is the cache sentinel position —
+one the causal mask hides until the moment a live request writes its own
+token there, so garbage never leaks into any slot's attention.
+
+Paged mode (``block_size`` set): each slot additionally carries its block
+table — the list of physical blocks its virtual positions [0, max_len)
+map onto — mirrored into a fixed-width [S, n_max] device array by
+``block_tables()`` (unallocated entries padded with the sentinel block 0).
+The block ids themselves are owned by ``blocks.BlockAllocator``; the table
+only transports them.
 """
 
 from __future__ import annotations
@@ -24,6 +32,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from .blocks import SENTINEL
 from .queue import Request
 
 FREE, PREFILL, ACTIVE = 0, 1, 2
@@ -35,10 +44,13 @@ class Slot:
     state: int = FREE
     request: Optional[Request] = None
     length: int = 0          # tokens currently in this slot's cache row
-    prefill_pos: int = 0     # prompt tokens already written
+    prefill_pos: int = 0     # prompt tokens already written (or shared)
     generated: int = 0       # tokens sampled for this request so far
     pending_token: int = 0   # next token to feed the decode step
     output: List[int] = field(default_factory=list)
+    # paged mode only:
+    blocks: List[int] = field(default_factory=list)   # physical block table
+    admit_seq: int = -1      # admission order (preemption picks the max)
 
     @property
     def req_id(self) -> int:
@@ -48,12 +60,21 @@ class Slot:
 class SlotTable:
     """Fixed pool of S slots + the [S]-shaped device-input builders."""
 
-    def __init__(self, max_slots: int, max_len: int):
+    def __init__(self, max_slots: int, max_len: int,
+                 block_size: Optional[int] = None):
         if max_slots < 1:
             raise ValueError("need at least one slot")
         self.max_slots = max_slots
         self.max_len = max_len
+        self.block_size = block_size
+        self.n_max = (-(-max_len // block_size)
+                      if block_size is not None else 0)
+        self._admits = 0
         self.slots = [Slot(i) for i in range(max_slots)]
+
+    @property
+    def paged(self) -> bool:
+        return self.block_size is not None
 
     # -- queries ----------------------------------------------------------
     def free(self) -> List[Slot]:
@@ -72,6 +93,11 @@ class SlotTable:
     def n_active(self) -> int:
         return sum(1 for s in self.slots if s.state == ACTIVE)
 
+    def youngest_busy(self) -> Optional[Slot]:
+        """The most recently admitted busy slot — the preemption victim."""
+        busy = self.busy()
+        return max(busy, key=lambda s: s.admit_seq) if busy else None
+
     # -- lifecycle --------------------------------------------------------
     def assign(self, slot: Slot, request: Request) -> None:
         if slot.state != FREE:
@@ -81,6 +107,7 @@ class SlotTable:
             raise ValueError(
                 f"request {request.req_id} needs {need} cache positions, "
                 f"slot holds {self.max_len}")
+        self._admits += 1
         slot.state = PREFILL
         slot.request = request
         slot.length = 0
@@ -88,6 +115,8 @@ class SlotTable:
         slot.generated = 0
         slot.pending_token = 0
         slot.output = []
+        slot.blocks = []
+        slot.admit_seq = self._admits
 
     def activate(self, slot: Slot, first_token: int) -> None:
         """Prefill finished: cache holds the prompt, first token sampled."""
@@ -100,8 +129,14 @@ class SlotTable:
         slot.output = [int(first_token)]
 
     def release(self, slot: Slot) -> Request:
+        """Free the slot.  Paged callers must hand the slot's blocks back
+        to the allocator FIRST — release only drops the host references."""
         if slot.state == FREE:
             raise RuntimeError(f"slot {slot.index} already free")
+        if slot.blocks:
+            raise RuntimeError(
+                f"slot {slot.index} released with {len(slot.blocks)} live "
+                "blocks — free them through the allocator first")
         request = slot.request
         slot.state = FREE
         slot.request = None
@@ -109,21 +144,32 @@ class SlotTable:
         slot.prefill_pos = 0
         slot.generated = 0
         slot.pending_token = 0
+        slot.admit_seq = -1
         return request
 
     # -- device-input builders --------------------------------------------
+    @property
+    def _sentinel_pos(self) -> int:
+        """Masked rows write here: the last virtual position.  Contiguous:
+        ``max_len - 1``.  Paged: ``n_max * block_size - 1`` — which equals
+        ``max_len - 1`` when block_size divides max_len (the paged engine
+        enforces that, so the two backends mask identically)."""
+        if self.paged:
+            return self.n_max * self.block_size - 1
+        return self.max_len - 1
+
     def decode_inputs(self):
         """(tokens [S,1], offsets [S], active [S], req_ids [S], tok_idx [S]).
 
         ``offsets`` is each ACTIVE slot's current length (the position its
         pending token is written to and attends from); masked rows write to
-        the sentinel ``max_len-1``.  ``tok_idx`` is the per-request token
-        index of the token being sampled THIS step (generated count), the
-        second fold-in of the RNG discipline.
+        the sentinel position.  ``tok_idx`` is the per-request token index
+        of the token being sampled THIS step (generated count), the second
+        fold-in of the RNG discipline.
         """
         S = self.max_slots
         tokens = np.zeros((S, 1), np.int32)
-        offsets = np.full((S,), self.max_len - 1, np.int32)
+        offsets = np.full((S,), self._sentinel_pos, np.int32)
         active = np.zeros((S,), bool)
         req_ids = np.zeros((S,), np.int32)
         tok_idx = np.zeros((S,), np.int32)
@@ -136,3 +182,22 @@ class SlotTable:
             req_ids[s.index] = s.req_id
             tok_idx[s.index] = s.generated
         return tokens, offsets, active, req_ids, tok_idx
+
+    def block_tables(self) -> np.ndarray:
+        """[S, n_max] int32 physical-block tables, sentinel-padded.  Masked
+        rows are all-sentinel, so their writes land in the garbage block."""
+        if not self.paged:
+            raise RuntimeError("block_tables() needs a paged SlotTable")
+        tables = np.full((self.max_slots, self.n_max), SENTINEL, np.int32)
+        for s in self.slots:
+            if s.blocks:
+                tables[s.index, :len(s.blocks)] = s.blocks
+        return tables
+
+    def block_table_row(self, slot: Slot) -> np.ndarray:
+        """[1, n_max] table for one slot (the admission-prefill input)."""
+        if not self.paged:
+            raise RuntimeError("block_table_row() needs a paged SlotTable")
+        row = np.full((1, self.n_max), SENTINEL, np.int32)
+        row[0, :len(slot.blocks)] = slot.blocks
+        return row
