@@ -8,12 +8,19 @@ expected crossover: the latency-optimal butterfly wins small payloads, the
 bandwidth-optimal ring wins large ones, and ``BSPConfig(schedule="auto")``
 picks accordingly.
 
-Standalone: PYTHONPATH=src python -m benchmarks.schedule_matrix
+Results are persisted machine-readably to ``BENCH_schedules.json``
+(predicted rankings, NoC replay cycles, measured refinements, speedup of
+the auto pick vs the serial Naïve baseline) so the perf trajectory is
+tracked across PRs.
+
+Standalone: PYTHONPATH=src python -m benchmarks.schedule_matrix [--out F]
 Harness:    PYTHONPATH=src python -m benchmarks.run --only schedule_matrix
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -59,12 +66,13 @@ def _measure_fn(mesh, axes, sizes, n_bytes):
     return measure
 
 
-def run() -> None:
+def run(out: str = "BENCH_schedules.json") -> None:
     link = CM.MAGIA
     flit_bytes = 4  # 32-bit NoC flits
     print("schedule_matrix/mesh,payload_B,auto_pick,cost_ranking,"
           "noc_cycles_winner")
     crossover = {}
+    results = {"cells": [], "measured": []}
     for shape in SHAPES:
         for vol in PAYLOADS_B:
             result = autotune.autotune(shape, vol, link=link)
@@ -76,6 +84,16 @@ def run() -> None:
             print(f"schedule_matrix/{shape[0]}x{shape[1]},{vol:.0e},"
                   f"{result.schedule},{ranking},{replay.overhead}")
             crossover[(shape, vol)] = result.schedule
+            costs = dict(result.ranking)
+            results["cells"].append({
+                "shape": list(shape), "payload_B": vol,
+                "chosen": result.schedule,
+                "predicted_s": dict(result.ranking),
+                "noc_cycles_chosen": int(replay.overhead),
+                "speedup_vs_naive": (costs["naive"] / costs[result.schedule]
+                                     if costs.get(result.schedule)
+                                     else None),
+            })
 
     # the sweep's headline claim, asserted so regressions are loud
     small = [crossover[(s, PAYLOADS_B[0])] for s in CROSSOVER_SHAPES]
@@ -98,11 +116,30 @@ def run() -> None:
             rows = " ".join(f"{n}:{t * 1e6:.0f}us" for n, t in tuned.measured)
             print(f"schedule_matrix/measured_{MEASURE_SHAPE[0]}x"
                   f"{MEASURE_SHAPE[1]},4e5,{tuned.schedule},{rows},")
+            results["measured"].append({
+                "shape": list(MEASURE_SHAPE), "payload_B": 4e5,
+                "chosen": tuned.schedule,
+                "predicted_s": dict(tuned.ranking),
+                "measured_s": dict(tuned.measured),
+            })
         else:
             print("schedule_matrix/measured,skip,"
                   f"needs {np.prod(MEASURE_SHAPE)} devices,")
     except Exception as e:  # measurement is optional refinement, not gating
         print(f"schedule_matrix/measured,error,{type(e).__name__},")
+
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"schedule_matrix/json,written,{out}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_schedules.json",
+                    help="machine-readable results path ('' disables)")
+    args = ap.parse_args(argv)
+    run(out=args.out)
 
 
 if __name__ == "__main__":
@@ -111,4 +148,4 @@ if __name__ == "__main__":
         os.environ["XLA_FLAGS"] = (
             "--xla_force_host_platform_device_count=16 "
             + os.environ.get("XLA_FLAGS", ""))
-    run()
+    main()

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
 
@@ -32,6 +32,7 @@ from repro import compat
 from . import collectives
 from .barrier import barrier_tie
 from .collectives import fractal_barrier
+from .cost_model import LinkParams
 
 
 @dataclass(frozen=True)
@@ -51,10 +52,26 @@ class BSPConfig:
     bucket_mb   : partition the gradient pytree into ~this many MB per
                   bucket (reverse-layer order) and pipeline one collective
                   per bucket (core.superstep.SuperstepEngine); None → one
-                  monolithic bucket (the pre-engine behavior).
+                  monolithic bucket (the pre-engine behavior); "auto" →
+                  bucket boundaries searched by dynamic programming over
+                  leaf prefix sums against the overlap-aware cost model
+                  (greedy packing kept as the DP's upper bound/fallback).
     overlap     : the bucketing A/B switch — False disables bucketing even
                   when bucket_mb is set, collapsing the superstep back to
                   the monolithic single-collective baseline.
+    bucket_codec: per-bucket wire-compression policy.  None → every bucket
+                  uses the uniform ``compression`` codec (the historical
+                  behavior); "auto" → the autotuner picks a codec PER
+                  BUCKET through the cost model (large bandwidth-bound
+                  buckets compress harder, small latency-bound tail buckets
+                  skip compression); an explicit codec name forces it on
+                  every fractal-scheduled bucket (no other lowering has a
+                  wire-codec path — non-fractal buckets stay uncompressed).
+    link        : cost-model link parameters the autotuner prices with;
+                  None → the analytic TPU_V5E_ICI defaults.  Pass fitted
+                  params from ``core.calibrate.fit_link_params`` (the train
+                  CLI's ``--calibrate``) to tune against measured platform
+                  numbers.
     """
 
     sync_axes: Tuple[str, ...] = ("data",)
@@ -62,16 +79,24 @@ class BSPConfig:
     compression: str = "none"
     fsync_level: Optional[int] = None
     pad_align: int = 128
-    bucket_mb: Optional[float] = None
+    bucket_mb: Union[float, str, None] = None
     overlap: bool = True
+    bucket_codec: Optional[str] = None
+    link: Optional[LinkParams] = None
 
     def __post_init__(self):
         if self.schedule != "auto" and \
                 self.schedule not in collectives.SCHEDULES:
             raise ValueError(f"unknown schedule {self.schedule!r}")
-        if self.bucket_mb is not None and self.bucket_mb <= 0:
+        if isinstance(self.bucket_mb, str):
+            if self.bucket_mb != "auto":
+                raise ValueError(f"bucket_mb must be a positive size in MB, "
+                                 f"None, or 'auto'; got {self.bucket_mb!r}")
+        elif self.bucket_mb is not None and self.bucket_mb <= 0:
             raise ValueError(f"bucket_mb must be positive, "
                              f"got {self.bucket_mb}")
+        if self.bucket_codec not in (None, "auto", "none", "bf16", "int8"):
+            raise ValueError(f"unknown bucket_codec {self.bucket_codec!r}")
 
 
 def _world(sizes: Sequence[int]) -> int:
@@ -99,6 +124,8 @@ def resolve_schedule(cfg: BSPConfig, sizes: Sequence[int],
     if cfg.schedule != "auto":
         return cfg.schedule
     from .autotune import pick_schedule
+    if cfg.link is not None:
+        return pick_schedule(tuple(sizes), payload_bytes, link=cfg.link)
     return pick_schedule(tuple(sizes), payload_bytes)
 
 

@@ -87,6 +87,18 @@ def _ppermute_flat(x, axis_names: AxisNames, perm):
     return lax.ppermute(x, axis_names, perm)
 
 
+def _codec_exchange(send, axis_names: AxisNames, perm, codec):
+    """One point-to-point exchange, optionally codec-compressed on the wire
+    (the single definition of the wire protocol: encode → permute every
+    wire leaf → decode).  Shared by every fractal halving/doubling step."""
+    if codec is None:
+        return _ppermute_flat(send, axis_names, perm)
+    wire = codec.encode(send)
+    wire = jax.tree.map(
+        lambda leaf: _ppermute_flat(leaf, axis_names, perm), wire)
+    return codec.decode(wire, send.shape, send.dtype)
+
+
 # ---------------------------------------------------------------------------
 # fractal (H-tree / butterfly) schedules
 # ---------------------------------------------------------------------------
@@ -140,12 +152,7 @@ def fractal_all_reduce(x: jax.Array, axis_names: AxisNames,
 
     def exchange(send, b):
         perm = _flat_perm(sizes, lambda i: i ^ (1 << b))
-        if codec is None:
-            return _ppermute_flat(send, axis_names, perm)
-        wire = codec.encode(send)
-        wire = jax.tree.map(
-            lambda leaf: _ppermute_flat(leaf, axis_names, perm), wire)
-        return codec.decode(wire, send.shape, send.dtype)
+        return _codec_exchange(send, axis_names, perm, codec)
 
     # ---- reduce-scatter by halves ----
     for b in range(L):
@@ -169,10 +176,15 @@ def fractal_all_reduce(x: jax.Array, axis_names: AxisNames,
 
 
 def fractal_reduce_scatter(x: jax.Array, axis_names: AxisNames,
-                           sizes: Sequence[int]) -> jax.Array:
+                           sizes: Sequence[int], codec=None) -> jax.Array:
     """Reduce-scatter by recursive halving: log2(N) steps, V·(N−1)/N bytes.
     Output is this device's shard (leading dim / N). Shard order follows the
-    butterfly bit order (LSB-first); ``fractal_all_gather`` inverts it."""
+    butterfly bit order (LSB-first); ``fractal_all_gather`` inverts it.
+
+    ``codec`` compresses each exchanged half on the wire (the RS half of the
+    per-bucket compression policy; partial sums are re-quantized per hop, so
+    accuracy rides the codec's tolerance like the all-reduce codec path).
+    """
     L = _n_levels(sizes)
     n = 1 << L
     if x.shape[0] % n:
@@ -183,9 +195,8 @@ def fractal_reduce_scatter(x: jax.Array, axis_names: AxisNames,
         bit = (idx >> b) & 1
         keep = lax.dynamic_slice_in_dim(x, bit * half, half, axis=0)
         send = lax.dynamic_slice_in_dim(x, (1 - bit) * half, half, axis=0)
-        recv = _ppermute_flat(send, axis_names,
-                              _flat_perm(sizes, lambda i, b=b: i ^ (1 << b)))
-        x = keep + recv
+        perm = _flat_perm(sizes, lambda i, b=b: i ^ (1 << b))
+        x = keep + _codec_exchange(send, axis_names, perm, codec)
     return x
 
 
@@ -399,7 +410,7 @@ def bit_reversed_index(axis_names: AxisNames, sizes: Sequence[int]
 
 
 def reduce_scatter(x: jax.Array, schedule: str, axis_names: AxisNames,
-                   sizes: Sequence[int]) -> jax.Array:
+                   sizes: Sequence[int], codec=None) -> jax.Array:
     """Schedule-dispatched reduce-scatter of a flat payload (sum, no mean).
 
     Returns this rank's shard (leading dim / world) at the bit-reversed
@@ -407,10 +418,13 @@ def reduce_scatter(x: jax.Array, schedule: str, axis_names: AxisNames,
     reduce-scatters natively (half the butterfly); every other schedule
     falls back to its full all-reduce followed by a local slice — same
     bytes on the wire as its all-reduce, same shard layout out.
+
+    ``codec`` wire-compresses the fractal path only (the per-bucket codec
+    policy never assigns codecs to other schedules).
     """
     world = math.prod(sizes)
     if schedule == "fractal":
-        return fractal_reduce_scatter(x, axis_names, sizes)
+        return fractal_reduce_scatter(x, axis_names, sizes, codec=codec)
     shard_len = x.shape[0] // world
     full = all_reduce(x, schedule, axis_names, sizes)
     rev = bit_reversed_index(axis_names, sizes)

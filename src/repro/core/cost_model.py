@@ -30,6 +30,15 @@ class LinkParams:
     alpha_s: float          # per-step latency (s): hop/launch overhead
     bw_Bps: float           # per-link bandwidth, bytes/s
     name: str = "link"
+    # per-hop latency of multi-hop mesh routes (s); None → alpha_s, which
+    # reproduces the historical ``hops × alpha`` pricing.  ``fit_link_params``
+    # (core.calibrate) fits it separately from alpha: on real fabrics the
+    # launch overhead dwarfs the per-hop forwarding cost.
+    hop_s: Optional[float] = None
+
+    @property
+    def hop(self) -> float:
+        return self.alpha_s if self.hop_s is None else self.hop_s
 
 
 MAGIA = LinkParams(alpha_s=1e-9, bw_Bps=4e9, name="magia-noc")      # 1 cycle @1GHz, 32bit@1GHz
@@ -221,10 +230,82 @@ def program_cost(prog: schedule_ir.Program, vol_B: float,
         frac = step.max_chunks_moved / prog.n_chunks
         if geometry is not None and not outer:
             hops, link_load = geometry[i]
-            total += hops * lp.alpha_s + max(frac, link_load) * vol_B / lp.bw_Bps
+            total += (lp.alpha_s + (hops - 1) * lp.hop
+                      + max(frac, link_load) * vol_B / lp.bw_Bps)
         else:
             total += lp.alpha_s + frac * vol_B / lp.bw_Bps
     return total
+
+
+def step_features(prog: schedule_ir.Program,
+                  mesh_contention: bool = True
+                  ) -> Tuple[int, int, float]:
+    """(n_steps, extra_hops, load_frac) such that, single-tier,
+
+        program_cost ≡ n_steps·α + extra_hops·hop + load_frac·V·(1/bw)
+
+    — the program's cost is LINEAR in the link parameters, which is what
+    lets ``core.calibrate.fit_link_params`` least-squares-fit (α, hop, β)
+    from measured (program, payload) → seconds samples.
+    """
+    geometry = _step_geometry(prog) if mesh_contention else None
+    n_steps, extra_hops, load_frac = 0, 0, 0.0
+    for i, step in enumerate(prog.steps):
+        if not step.transfers:
+            continue
+        frac = step.max_chunks_moved / prog.n_chunks
+        n_steps += 1
+        if geometry is not None:
+            hops, link_load = geometry[i]
+            extra_hops += hops - 1
+            load_frac += max(frac, link_load)
+        else:
+            load_frac += frac
+    return n_steps, extra_hops, load_frac
+
+
+# -- payload-band memoization ------------------------------------------------
+#
+# Engine builds price O(buckets × candidates) programs, and the DP bucket
+# search prices O(leaves²) segment payloads.  Exact payloads rarely repeat,
+# but prices within a quarter-octave of payload are indistinguishable for
+# schedule choice — so cacheable pricing quantizes the payload to a
+# geometric band and memoizes per (program, band, links, mode).
+
+BANDS_PER_OCTAVE = 4
+
+
+def payload_band(vol_B: float) -> int:
+    """Quarter-octave band index of a payload size (0-byte payloads → -1)."""
+    if vol_B <= 0:
+        return -1
+    return int(round(BANDS_PER_OCTAVE * math.log2(vol_B)))
+
+
+def band_payload(band: int) -> float:
+    """Representative payload (band center) of a band index."""
+    if band < 0:
+        return 0.0
+    return 2.0 ** (band / BANDS_PER_OCTAVE)
+
+
+@lru_cache(maxsize=16384)
+def _program_cost_banded(prog: schedule_ir.Program, band: int,
+                         link: LinkParams, outer_link: Optional[LinkParams],
+                         mesh_contention: bool) -> float:
+    return program_cost(prog, band_payload(band), link, outer_link,
+                        mesh_contention)
+
+
+def program_cost_banded(prog: schedule_ir.Program, vol_B: float,
+                        link: LinkParams,
+                        outer_link: Optional[LinkParams] = None,
+                        mesh_contention: bool = False) -> float:
+    """``program_cost`` with the payload quantized to its quarter-octave
+    band — repeated pricings of near-identical payloads hit one cache line
+    (the memoization the ISSUE's perf-fix satellite asks for)."""
+    return _program_cost_banded(prog, payload_band(vol_B), link, outer_link,
+                                mesh_contention)
 
 
 def program_barrier_cost(prog: schedule_ir.Program, link: LinkParams,
@@ -275,20 +356,27 @@ def overlap_step_cost(progs: Sequence[schedule_ir.Program],
                       ready_s: Sequence[float],
                       link: LinkParams,
                       outer_link: Optional[LinkParams] = None,
-                      mesh_contention: bool = True) -> OverlapTimeline:
+                      mesh_contention: bool = True,
+                      extra_s: Optional[Sequence[float]] = None
+                      ) -> OverlapTimeline:
     """Price a sequence of bucket programs on one shared-fabric timeline.
 
     ``progs[i]`` moves ``vols_B[i]`` bytes/rank and may start no earlier
     than ``ready_s[i]``; programs occupy the fabric in order (bucket i+1
     waits for bucket i — in-order issue, matching the runtime lowering).
-    ``serial_s`` is the monolithic baseline where no communication starts
-    until every bucket is ready (the sum the ISSUE's overlap benchmark
-    compares against).
+    ``extra_s[i]`` adds a fixed per-bucket cost on top of the program price
+    (e.g. codec quant/dequant launches).  ``serial_s`` is the monolithic
+    baseline where no communication starts until every bucket is ready
+    (the sum the ISSUE's overlap benchmark compares against).
     """
     if not (len(progs) == len(vols_B) == len(ready_s)):
         raise ValueError("progs, vols_B, ready_s must have equal length")
-    costs = tuple(program_cost(p, v, link, outer_link, mesh_contention)
-                  for p, v in zip(progs, vols_B))
+    if extra_s is None:
+        extra_s = (0.0,) * len(progs)
+    elif len(extra_s) != len(progs):
+        raise ValueError("extra_s must match progs in length")
+    costs = tuple(program_cost(p, v, link, outer_link, mesh_contention) + e
+                  for p, v, e in zip(progs, vols_B, extra_s))
     starts, ends = [], []
     fabric_free = 0.0
     for c, r in zip(costs, ready_s):

@@ -126,12 +126,16 @@ class BucketMeta:
     n_buckets    : total buckets in the superstep
     offset_elems : start of this bucket in the bucket-ordered flat vector
     length_elems : padded element count of this bucket
+    codec        : wire codec this bucket's payload rides ("bf16" | "int8";
+                   None = uncompressed) — the per-bucket compression policy
+                   the autotuner picks is part of bucket identity too
     """
 
     index: int
     n_buckets: int
     offset_elems: int
     length_elems: int
+    codec: Optional[str] = None
 
 
 @dataclass(frozen=True)

@@ -15,6 +15,12 @@ for the mesh/payload at build time.
 ``--bucket-mb N`` partitions the gradients into ~N MB reverse-layer buckets
 and pipelines one collective per bucket (SuperstepEngine); with
 ``--schedule auto`` the autotuner picks a schedule *per bucket*.
+``--bucket-mb auto`` searches the bucket boundaries themselves (dynamic
+program over leaf prefix sums against the overlap-aware cost model), and
+``--bucket-codec auto`` lets the tuner pick a wire codec per bucket.
+``--calibrate`` times a grid of real collectives on the launch devices
+first and fits the cost model's link parameters to the measurements, so
+every "auto" pick is priced with platform numbers instead of defaults.
 ``--no-overlap`` is the A/B switch back to the monolithic single-collective
 superstep; ``--grad-accum K`` accumulates over K micro-batches per rank.
 """
@@ -22,6 +28,10 @@ superstep; ``--grad-accum K`` accumulates over K micro-batches per rank.
 import argparse
 import os
 import sys
+
+
+def _bucket_mb_arg(v):
+    return "auto" if v == "auto" else float(v)
 
 
 def main(argv=None):
@@ -33,9 +43,17 @@ def main(argv=None):
     ap.add_argument("--schedule", default="fractal")
     ap.add_argument("--compression", default="none")
     ap.add_argument("--fsync-level", type=int, default=None)
-    ap.add_argument("--bucket-mb", type=float, default=None,
+    ap.add_argument("--bucket-mb", type=_bucket_mb_arg, default=None,
                     help="pipeline gradient sync over ~N MB buckets "
-                         "(reverse-layer order; default: monolithic)")
+                         "(reverse-layer order; default: monolithic), or "
+                         "'auto' for the DP bucket-boundary search")
+    ap.add_argument("--bucket-codec", default=None,
+                    choices=["auto", "none", "bf16", "int8"],
+                    help="per-bucket wire codec: 'auto' lets the tuner "
+                         "pick per bucket (default: uniform --compression)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit cost-model link params from measured "
+                         "collectives on the launch devices before tuning")
     ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="--no-overlap collapses bucketing back to the "
@@ -91,11 +109,43 @@ def main(argv=None):
         state = (params, opt)
         bshard = {k: NamedSharding(mesh, s) for k, s in bspec.items()}
     else:
+        link = None
+        if args.calibrate:
+            # Fitted params are persisted next to the checkpoints and
+            # RELOADED on resume: refitting from fresh (noisy) timings
+            # could move the DP bucket boundaries and invalidate the
+            # checkpointed moment layout with no way back.
+            import dataclasses
+            import json
+            cal_path = (os.path.join(args.checkpoint_dir,
+                                     "link_calibration.json")
+                        if args.checkpoint_dir else None)
+            if cal_path and os.path.exists(cal_path):
+                from repro.core.cost_model import LinkParams
+                with open(cal_path) as f:
+                    link = LinkParams(**json.load(f)["link"])
+                print(f"calibrate: reloaded {link.name} from {cal_path}")
+            elif n_dev >= 2:
+                from repro.core.calibrate import fit_link_params
+                # fit on the largest power-of-two sub-mesh the devices allow
+                fit = fit_link_params(min_devices=2)
+                print(fit.describe())
+                link = fit.link
+                if cal_path:
+                    os.makedirs(args.checkpoint_dir, exist_ok=True)
+                    with open(cal_path, "w") as f:
+                        json.dump({"link": dataclasses.asdict(link)}, f,
+                                  indent=2)
+            else:
+                print("calibrate: skipped (needs ≥2 devices; "
+                      "pass --devices 8)")
         bsp = BSPConfig(sync_axes=("data",), schedule=args.schedule,
                         compression=args.compression,
                         fsync_level=args.fsync_level,
                         bucket_mb=args.bucket_mb,
-                        overlap=args.overlap)
+                        overlap=args.overlap,
+                        bucket_codec=args.bucket_codec,
+                        link=link)
         step_fn, init_state = trainer.make_bsp_train_step(
             cfg, mesh, acfg, bsp, grad_accum=args.grad_accum)
         state = init_state(params)

@@ -36,7 +36,7 @@ from repro.configs.base import ArchConfig
 from repro.core import collectives as C
 from repro.core import superstep
 from repro.core.barrier import barrier_tie
-from repro.core.bsp import BSPConfig, bsp_shard_map, make_codec
+from repro.core.bsp import BSPConfig, bsp_shard_map
 from repro.models import act_sharding as ACT
 from repro.models import sharding as SH
 from repro.models import transformer as T
@@ -183,7 +183,6 @@ def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
         raise ValueError(f"grad_accum must be >= 1, got {grad_accum}")
     sizes = tuple(mesh.shape[a] for a in bsp.sync_axes)
     world = math.prod(sizes)
-    codec = make_codec(bsp.compression)
 
     pshape = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.key(0))
     # the engine's flat layout is f32 (grads/moments are f32 regardless of
@@ -191,7 +190,15 @@ def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
     engine = superstep.engine_for(pshape, bsp, sizes,
                                   force_dtype=jnp.float32, zero1=True)
     flat_total = engine.total_padded
-    print(f"superstep: {engine.describe()}")
+    # Per-bucket codec plan: uniform `compression` under bucket_codec=None
+    # (the historical EF-then-f32-wire path, bit-for-bit); an explicit
+    # bucket_codec additionally wire-compresses the fractal reduce-scatter
+    # exchanges of codec'd buckets (per-hop quantization, EF-corrected).
+    bucket_codecs = engine.bucket_codecs
+    has_codec = any(c is not None for c in bucket_codecs)
+    wire_codecs = bucket_codecs if bsp.bucket_codec is not None \
+        else (None,) * engine.n_buckets
+    print(f"superstep: {engine.describe()} (link={engine.link.name})")
     # fingerprint of the flat moment layout (bucket boundaries × world):
     # checkpoints carry it so a resume under a different --bucket-mb (or a
     # pre-engine moment ordering) fails loudly instead of silently binding
@@ -245,18 +252,21 @@ def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
             lambda v: jax.lax.psum(v, bsp.sync_axes) / world, metrics)
 
         g_parts = engine.pack(jax.tree.leaves(grads), dtype=jnp.float32)
-        if codec is not None and ef is not None:
+        if has_codec and ef is not None:
             # per-rank EF residual, bucket-ordered like the flat layout.
             # The wire payload is the QUANTIZED corrected gradient —
             # corrected − residual ≡ dequant(quant(corrected)) — so the
             # residual compensates a quantization that actually reached the
-            # reduction (classic EF-SGD), not a hypothetical one.
+            # reduction (classic EF-SGD), not a hypothetical one.  Buckets
+            # whose policy skips compression pass through untouched (their
+            # residual slice stays zero).
             new_ef = []
-            for bkt, part in zip(engine.buckets, g_parts):
+            for bkt, part, c in zip(engine.buckets, g_parts, bucket_codecs):
                 res = jax.lax.dynamic_slice_in_dim(
                     ef, bkt.offset, bkt.length)
-                corrected, res = error_feedback_step(part, res, codec)
-                g_parts[bkt.index] = corrected - res
+                if c is not None:
+                    corrected, res = error_feedback_step(part, res, c)
+                    g_parts[bkt.index] = corrected - res
                 new_ef.append(res)
             ef = jnp.concatenate(new_ef)
 
@@ -265,10 +275,11 @@ def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
 
         # --- pipelined communicate/update/publish, one bucket at a time ----
         new_p_parts, new_mu_parts, new_nu_parts, om = [], [], [], {}
-        for bkt, schedule, g_part, p_part, s_len, s_off in zip(
-                engine.buckets, engine.schedules, g_parts, p_parts,
-                shard_lens, shard_offs):
-            g_shard = engine.reduce_scatter_bucket(g_part, schedule) / world
+        for bkt, schedule, wc, g_part, p_part, s_len, s_off in zip(
+                engine.buckets, engine.schedules, wire_codecs, g_parts,
+                p_parts, shard_lens, shard_offs):
+            g_shard = engine.reduce_scatter_bucket(
+                g_part, schedule, codec=wc) / world
             p_shard = jax.lax.dynamic_slice_in_dim(
                 p_part, rev * s_len, s_len)
             mu_b = jax.lax.dynamic_slice_in_dim(flat_mu, s_off, s_len)
@@ -301,10 +312,10 @@ def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
         bspec["frontend"] = P(bsp.sync_axes, None, None)
 
     in_specs = (rep, shard_spec, shard_spec,
-                shard_spec if codec is not None else P(),
+                shard_spec if has_codec else P(),
                 P(), bspec)
     out_specs = (rep, shard_spec, shard_spec,
-                 shard_spec if codec is not None else P(),
+                 shard_spec if has_codec else P(),
                  P(), P())
 
     def wrapped(params, flat_mu, flat_nu, ef, step, batch):
@@ -323,7 +334,7 @@ def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
         # EF residual is PER-RANK state of full bucket-ordered length:
         # global (world × flat_total) sharded over the sync axes
         ef = jnp.zeros((world * flat_total,), jnp.float32) \
-            if codec is not None \
+            if has_codec \
             else jnp.zeros((world,), jnp.float32)   # placeholder
         return params, mu, nu, ef, jnp.zeros((), jnp.int32)
 

@@ -148,6 +148,75 @@ def main():
                                            atol=tol * scale)
         check(f"bucketed[fractal+{comp}] ≈ psum-mean", do)
 
+    # --- DP bucket-boundary search (bucket_mb="auto") ----------------------
+    # Boundaries move; the reduction tree does not: the fractal DP plan must
+    # stay bit-identical to the monolithic sync.  A bandwidth-starved link
+    # forces the DP to actually split (with the default TPU link this tiny
+    # payload is latency-bound and one bucket IS optimal).
+    def dp_auto():
+        from repro.core.cost_model import LinkParams
+        starved = LinkParams(alpha_s=1e-9, bw_Bps=1e6, name="starved")
+        cfg = BSPConfig(sync_axes=AXES, schedule="fractal",
+                        bucket_mb="auto", link=starved)
+        eng = SS.engine_for(tree, cfg, SIZES)
+        assert eng.plan is not None and eng.plan.source == "dp", \
+            eng.describe()
+        assert eng.n_buckets > 1, \
+            f"starved link should split buckets, got {eng.describe()}"
+        out = run_sync(tree, cfg)
+        for got, want in zip(jax.tree.leaves(out),
+                             jax.tree.leaves(mono["fractal"])):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    check("bucketed[bucket_mb=auto,fractal] == monolithic exactly", dp_auto)
+
+    # --- per-bucket codec (bucket_codec) -----------------------------------
+    def bucket_codec_forced():
+        cfg = BSPConfig(sync_axes=AXES, schedule="fractal",
+                        bucket_mb=0.002, bucket_codec="bf16")
+        out = run_sync(tree, cfg)
+        for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+            scale = max(np.abs(want).max(), 1e-3)
+            np.testing.assert_allclose(np.asarray(got), want,
+                                       atol=2e-2 * scale)
+    check("bucketed[bucket_codec=bf16] ≈ psum-mean", bucket_codec_forced)
+
+    def bucket_codec_auto_none_is_exact():
+        # tiny latency-bound buckets: the policy must skip compression,
+        # making the auto-codec path bit-identical to the codec-free one
+        cfg = BSPConfig(sync_axes=AXES, schedule="fractal",
+                        bucket_mb=0.002, bucket_codec="auto")
+        eng = SS.engine_for(tree, cfg, SIZES)
+        assert all(c == "none" for c in eng.codec_names), eng.describe()
+        out = run_sync(tree, cfg)
+        for got, want in zip(jax.tree.leaves(out),
+                             jax.tree.leaves(mono["fractal"])):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    check("bucketed[bucket_codec=auto→none] == monolithic exactly",
+          bucket_codec_auto_none_is_exact)
+
+    # --- codec'd fractal reduce-scatter (the ZeRO-1 trainer wire path) -----
+    def rs_codec():
+        from repro.core import collectives as C
+        from repro.optim.compression import Bf16Codec
+        flat = jnp.asarray(rng.normal(size=(N_DEV * N_DEV * 128,))
+                           .astype(np.float32))
+        spec = P(("a", "b"))
+        mesh = jax.make_mesh(SIZES, AXES)
+
+        def run_rs(codec):
+            fn = jax.jit(compat.shard_map(
+                lambda v: C.reduce_scatter(v, "fractal", AXES, SIZES,
+                                           codec=codec),
+                mesh, (spec,), spec, check_vma=False,
+                axis_names=frozenset(AXES)))
+            return np.asarray(fn(flat))
+
+        exact = run_rs(None)
+        coded = run_rs(Bf16Codec())
+        scale = max(np.abs(exact).max(), 1e-3)
+        np.testing.assert_allclose(coded, exact, atol=2e-2 * scale)
+    check("reduce_scatter[fractal+bf16 wire] ≈ uncompressed", rs_codec)
+
     print(f"ALL OK ({len(PASS)} checks)")
 
 
