@@ -135,3 +135,30 @@ def pallas_supported() -> bool:
         or hasattr(pltpu, "CompilerParams")
         or hasattr(pltpu, "TPUCompilerParams"),
     ))
+
+
+def on_tpu() -> bool:
+    """True when jax's default backend is a real TPU — the kernels run
+    natively; anywhere else they run in interpret mode (or not at all)."""
+    return jax.default_backend() == "tpu"
+
+
+def import_pallas_kernels(module: str, *names: str):
+    """The one definition of the kernel-dispatch import guard every
+    ``kernels/*/ops.py`` shares: import ``names`` from the sibling
+    ``kernel`` module, gated on ``pallas_supported()``.
+
+    Returns ``(*fns, ok)``: the kernel entry points (or ``None`` each) and
+    the dispatch flag ``_PALLAS_OK``.  A kernel-module import can fail
+    independently of the coarse API probe (old/backendless jax installs),
+    so both are folded into one flag — ops fall back to the jnp reference
+    whenever it is False.
+    """
+    if pallas_supported():
+        try:
+            import importlib
+            mod = importlib.import_module(module)
+            return tuple(getattr(mod, n) for n in names) + (True,)
+        except Exception:  # pragma: no cover - broken installs only
+            pass
+    return (None,) * len(names) + (False,)

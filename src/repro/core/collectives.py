@@ -99,6 +99,24 @@ def _codec_exchange(send, axis_names: AxisNames, perm, codec):
     return codec.decode(wire, send.shape, send.dtype)
 
 
+def _codec_exchange_add(keep, send, axis_names: AxisNames, perm, codec):
+    """``keep + exchange(send)`` — the receive side of every reduce hop.
+
+    With a codec, the wire-decode is fused into the accumulate via
+    ``kernels.tree_reduce.ops.decode_add`` (one launch instead of
+    dequant-then-add; the fused per-step α that
+    ``autotune.CODEC_STEP_ALPHAS_FUSED`` prices).  Off-TPU ``decode_add``
+    IS ``keep + codec.decode(wire)``, so CPU numerics are bit-identical
+    to the unfused expression the collective tests pin."""
+    if codec is None:
+        return keep + _ppermute_flat(send, axis_names, perm)
+    from repro.kernels.tree_reduce.ops import decode_add
+    wire = codec.encode(send)
+    wire = jax.tree.map(
+        lambda leaf: _ppermute_flat(leaf, axis_names, perm), wire)
+    return decode_add(keep, wire, codec)
+
+
 # ---------------------------------------------------------------------------
 # fractal (H-tree / butterfly) schedules
 # ---------------------------------------------------------------------------
@@ -161,7 +179,8 @@ def fractal_all_reduce(x: jax.Array, axis_names: AxisNames,
         # keep-low if bit==0 (start 0) else keep-high (start half)
         keep = lax.dynamic_slice_in_dim(x, bit * half, half, axis=0)
         send = lax.dynamic_slice_in_dim(x, (1 - bit) * half, half, axis=0)
-        x = keep + exchange(send, b)
+        perm = _flat_perm(sizes, lambda i, b=b: i ^ (1 << b))
+        x = _codec_exchange_add(keep, send, axis_names, perm, codec)
 
     # ---- all-gather by doubles ----
     for b in reversed(range(L)):
@@ -196,7 +215,7 @@ def fractal_reduce_scatter(x: jax.Array, axis_names: AxisNames,
         keep = lax.dynamic_slice_in_dim(x, bit * half, half, axis=0)
         send = lax.dynamic_slice_in_dim(x, (1 - bit) * half, half, axis=0)
         perm = _flat_perm(sizes, lambda i, b=b: i ^ (1 << b))
-        x = keep + _codec_exchange(send, axis_names, perm, codec)
+        x = _codec_exchange_add(keep, send, axis_names, perm, codec)
     return x
 
 

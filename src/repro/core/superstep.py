@@ -444,7 +444,8 @@ class SuperstepEngine:
         their quant/dequant launch overhead — the same terms the policy
         pricing (``autotune.rank_policies``) chose them by.
         """
-        from .autotune import CODEC_STEP_ALPHAS, CODEC_WIRE_RATIO
+        from .autotune import CODEC_WIRE_RATIO, codec_step_alphas
+        alphas = codec_step_alphas()
         link = link if link is not None else self.link
         total_raw = max(1, sum(b.raw for b in self.buckets))
         ready, cum = [], 0
@@ -455,7 +456,7 @@ class SuperstepEngine:
                 * CODEC_WIRE_RATIO.get(c, 1.0)
                 for b, c in zip(self.buckets, self.codec_names)]
         progs = self.programs()
-        extra = [CODEC_STEP_ALPHAS.get(c, 0.0) * link.alpha_s * p.num_steps
+        extra = [alphas.get(c, 0.0) * link.alpha_s * p.num_steps
                  for c, p in zip(self.codec_names, progs)]
         return overlap_step_cost(progs, vols, ready, link,
                                  outer_link, mesh_contention, extra_s=extra)

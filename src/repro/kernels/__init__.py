@@ -14,7 +14,9 @@ def kernels_backend() -> str:
     """
     from repro.kernels.flash_attention import ops as _fa
     from repro.kernels.gemm import ops as _gemm
+    from repro.kernels.paged_attention import ops as _pa
     from repro.kernels.tree_reduce import ops as _tr
-    pallas = _gemm._PALLAS_OK and _fa._PALLAS_OK and _tr._PALLAS_OK
+    pallas = (_gemm._PALLAS_OK and _fa._PALLAS_OK and _tr._PALLAS_OK
+              and _pa._PALLAS_OK)
     return "pallas" if pallas else "reference"
 

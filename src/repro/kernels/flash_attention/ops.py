@@ -15,20 +15,12 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.compat import pallas_supported
+from repro.compat import import_pallas_kernels, on_tpu as _on_tpu
 
 from .ref import flash_attention_ref
 
-try:
-    from .kernel import flash_attention_pallas
-    _PALLAS_OK = pallas_supported()
-except Exception:  # pragma: no cover - exercised only on broken installs
-    flash_attention_pallas = None
-    _PALLAS_OK = False
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+flash_attention_pallas, _PALLAS_OK = import_pallas_kernels(
+    "repro.kernels.flash_attention.kernel", "flash_attention_pallas")
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))

@@ -8,20 +8,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.compat import pallas_supported
+from repro.compat import import_pallas_kernels, on_tpu as _on_tpu
 
 from .ref import gemm_ref
 
-try:  # pallas import itself can fail on old/backendless jax installs
-    from .kernel import gemm_pallas
-    _PALLAS_OK = pallas_supported()
-except Exception:  # pragma: no cover - exercised only on broken installs
-    gemm_pallas = None
-    _PALLAS_OK = False
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+gemm_pallas, _PALLAS_OK = import_pallas_kernels(
+    "repro.kernels.gemm.kernel", "gemm_pallas")
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",

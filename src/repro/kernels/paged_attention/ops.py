@@ -1,0 +1,99 @@
+"""Public fused paged-attention decode ops: GQA grouping + dispatch.
+
+Decode-only (T == 1), forward-only (no grads flow at serve time), so no
+custom_vjp is needed — dispatch is a straight three-way switch shared
+with the other kernel packages:
+
+  * TPU            → native Pallas kernel (block-table scalar prefetch)
+  * elsewhere      → the same kernel in interpret mode
+  * Pallas missing → the jnp gather-then-attend reference
+
+``models/layers.py`` routes its paged T==1 decode branch here when the
+resolved ``paged_kernel`` knob says "pallas"; the ``paged_gather`` path
+stays as the ref/oracle lowering ("ref").
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.compat import import_pallas_kernels, on_tpu
+
+from .ref import paged_attention_ref, paged_mla_attention_ref
+
+(paged_attention_pallas, paged_mla_attention_pallas,
+ _PALLAS_OK) = import_pallas_kernels(
+    "repro.kernels.paged_attention.kernel",
+    "paged_attention_pallas", "paged_mla_attention_pallas")
+
+
+def _lengths(offset, batch: int):
+    """Per-row valid-key counts from the cache offset (scalar or [B]):
+    a query at position ``offset`` attends positions [0, offset]."""
+    off = jnp.asarray(offset, jnp.int32)
+    if off.ndim == 0:
+        off = jnp.broadcast_to(off, (batch,))
+    return off + 1
+
+
+def paged_attention(q, k_pool, v_pool, tables, offset, *, scale=None,
+                    window=None, softcap=None,
+                    interpret: bool | None = None):
+    """Fused GQA decode over a paged KV pool.
+
+    q: [B, 1, Hq, d] (single decode query per row), pools
+    [N, bs, Hkv, d(v)], tables [B, n] int32, offset scalar or [B] (tokens
+    already cached; the query sits at that position) → [B, 1, Hq, dv],
+    never materializing the gathered [B, n*bs, ...] view.
+    """
+    B, T, Hq, d = q.shape
+    if T != 1:
+        raise ValueError(f"paged_attention is decode-only (T==1), got T={T}")
+    Hkv = k_pool.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qh = q[:, 0].reshape(B, Hkv, G, d)
+    lengths = _lengths(offset, B)
+    if not _PALLAS_OK:
+        o = paged_attention_ref(qh, k_pool, v_pool, tables, lengths,
+                                scale=scale, window=window, softcap=softcap)
+    else:
+        interpret = (not on_tpu()) if interpret is None else interpret
+        o = paged_attention_pallas(qh, k_pool, v_pool, tables, lengths,
+                                   scale=scale, window=window,
+                                   softcap=softcap, interpret=interpret)
+    return o.reshape(B, 1, Hq, v_pool.shape[-1])
+
+
+def paged_mla_attention(q_eff, q_rope, ckv_pool, kr_pool, tables, offset, *,
+                        scale: float, interpret: bool | None = None):
+    """Fused MLA absorbed decode over paged latent pools.
+
+    q_eff: [B, 1, H, r] (q_nope·W_uk), q_rope: [B, 1, H, dr], ckv_pool
+    [N, bs, r], kr_pool [N, bs, 1, dr] (as cached), tables [B, n], offset
+    scalar or [B] → latent attention output [B, 1, H, r] (the caller
+    applies W_uv outside — it is a weight, not cache, contraction).
+    """
+    B, T, H, r = q_eff.shape
+    if T != 1:
+        raise ValueError(
+            f"paged_mla_attention is decode-only (T==1), got T={T}")
+    qe = q_eff[:, 0]
+    qr = q_rope[:, 0]
+    kr = kr_pool[:, :, 0, :] if kr_pool.ndim == 4 else kr_pool
+    lengths = _lengths(offset, B)
+    if not _PALLAS_OK:
+        o = paged_mla_attention_ref(qe, qr, ckv_pool, kr, tables, lengths,
+                                    scale=scale)
+    else:
+        interpret = (not on_tpu()) if interpret is None else interpret
+        o = paged_mla_attention_pallas(qe, qr, ckv_pool, kr, tables,
+                                       lengths, scale=scale,
+                                       interpret=interpret)
+    return o[:, None]
+
+
+__all__ = ["paged_attention", "paged_mla_attention",
+           "paged_attention_ref", "paged_mla_attention_ref"]

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the fused paged-attention decode kernels.
+
+Each reference is the gather-then-attend computation the kernel fuses
+away: ``paged_gather`` materializes the virtual [B, n*bs, ...] KV view,
+then a dense masked-softmax attention runs over it.  Masking is by
+virtual position only — valid keys of row b are positions
+``< lengths[b]`` — which hides both future positions and the garbage
+gathered through sentinel-padded table entries (those always lie at or
+after the row's length).  This is the oracle the parity tests pin the
+kernel against, and the ``paged_kernel="ref"`` dispatch target.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gather(pool, tables):
+    """pool [N, bs, ...] + tables [B, n] → virtual view [B, n*bs, ...]."""
+    B, n = tables.shape
+    bs = pool.shape[1]
+    g = jnp.take(pool, tables.reshape(-1), axis=0)
+    return g.reshape((B, n * bs) + pool.shape[2:])
+
+
+def paged_attention_ref(q, k_pool, v_pool, tables, lengths, *, scale: float,
+                        window=None, softcap=None):
+    """q: [B, Hkv, G, d], pools: [N, bs, Hkv, d(v)], tables: [B, n],
+    lengths: [B] → [B, Hkv, G, dv]."""
+    k = _gather(k_pool, tables)                       # [B, S, Hkv, d]
+    v = _gather(v_pool, tables)                       # [B, S, Hkv, dv]
+    S = k.shape[1]
+    s = jnp.einsum("bhgd,bshd->bhgs", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(S, dtype=jnp.int32)[None, None, None, :]
+    length = lengths.astype(jnp.int32)[:, None, None, None]
+    mask = pos < length
+    if window is not None:
+        mask &= (length - 1 - pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def paged_mla_attention_ref(q_eff, q_rope, ckv_pool, kr_pool, tables,
+                            lengths, *, scale: float):
+    """q_eff: [B, H, r], q_rope: [B, H, dr], ckv_pool: [N, bs, r],
+    kr_pool: [N, bs, dr], tables: [B, n], lengths: [B] → [B, H, r]."""
+    c_kv = _gather(ckv_pool, tables)                  # [B, S, r]
+    k_r = _gather(kr_pool, tables)                    # [B, S, dr]
+    S = c_kv.shape[1]
+    s = jnp.einsum("bhr,bsr->bhs", q_eff, c_kv).astype(jnp.float32)
+    s = s + jnp.einsum("bhd,bsd->bhs", q_rope, k_r).astype(jnp.float32)
+    s = s * scale
+    pos = jnp.arange(S, dtype=jnp.int32)[None, None, :]
+    valid = pos < lengths.astype(jnp.int32)[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr",
+                      p.astype(c_kv.dtype), c_kv).astype(q_eff.dtype)

@@ -36,9 +36,12 @@ def _tree_reduce_kernel(x_ref, o_ref, *, levels: int):
 
 
 def tree_reduce_pallas(x: jax.Array, *, block: int = 512,
-                       interpret: bool = False) -> jax.Array:
+                       interpret: bool = False, out_dtype=None) -> jax.Array:
     """x: [N, D] → [D] pairwise-tree sum; N must be a power of two and
-    D % block == 0 (ops.py pads)."""
+    D % block == 0 (ops.py pads).  ``out_dtype`` decouples the result
+    dtype from the input — a bf16 *wire* payload accumulates in f32 and
+    lands in the caller's accumulation dtype without a second launch
+    (the fused-codec path of ``ops.coded_tree_reduce``)."""
     N, D = x.shape
     levels = int(math.log2(N))
     if 1 << levels != N:
@@ -51,9 +54,104 @@ def tree_reduce_pallas(x: jax.Array, *, block: int = 512,
         grid=(D // block,),
         in_specs=[pl.BlockSpec((N, block), lambda j: (0, j))],
         out_specs=pl.BlockSpec((1, block), lambda j: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((1, D), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((1, D), out_dtype or x.dtype),
         compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)
     return out[0]
+
+
+# ---------------------------------------------------------------------------
+# fused wire-codec variants: dequantize in VMEM, reduce in the same launch
+# ---------------------------------------------------------------------------
+
+
+def _int8_tree_reduce_kernel(q_ref, s_ref, o_ref, *, levels: int):
+    """One 128-lane codec block: dequant q·scale in VMEM, then the same
+    pairwise halving as ``_tree_reduce_kernel``.  H-tree order is
+    preserved; only the dequant multiply may fuse into the first add
+    (FMA), so fused vs dequant-then-reduce agree to an ulp, and the
+    reduction stays deterministic in worker count."""
+    acc = q_ref[:, 0, :].astype(jnp.float32) * s_ref[:, 0, :]   # [N, 128]
+    n = acc.shape[0]
+    for _ in range(levels):
+        half = n // 2
+        acc = acc[:half] + acc[half:n]
+        n = half
+    o_ref[...] = acc[:1].astype(o_ref.dtype)
+
+
+def int8_tree_reduce_pallas(q: jax.Array, scale: jax.Array, *,
+                            out_dtype=jnp.float32,
+                            interpret: bool = False) -> jax.Array:
+    """q: [N, nb, 128] int8 + scale: [N, nb, 1] f32 (per-row, per-128-lane
+    codec blocks) → [nb*128] tree sum of the dequantized rows, one launch.
+    N must be a power of two (ops.py pads with zero wire rows)."""
+    N, nb, C = q.shape
+    levels = int(math.log2(N))
+    if 1 << levels != N:
+        raise ValueError(f"N={N} not a power of two")
+    kernel = functools.partial(_int8_tree_reduce_kernel, levels=levels)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((N, 1, C), lambda j: (0, j, 0)),
+                  pl.BlockSpec((N, 1, 1), lambda j: (0, j, 0))],
+        out_specs=pl.BlockSpec((1, C), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, nb * C), out_dtype),
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(q, scale)
+    return out[0]
+
+
+def _decode_add_bf16_kernel(k_ref, w_ref, o_ref):
+    o_ref[...] = k_ref[...] + w_ref[...].astype(o_ref.dtype)
+
+
+def _decode_add_int8_kernel(k_ref, q_ref, s_ref, o_ref):
+    o_ref[...] = k_ref[...] + (q_ref[...].astype(jnp.float32)
+                               * s_ref[...]).astype(o_ref.dtype)
+
+
+def decode_add_bf16_pallas(keep: jax.Array, wire: jax.Array, *,
+                           block: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """keep [M] + bf16 wire [M] → [M]: dequant+accumulate in one launch —
+    the collective receive side of every fractal halving exchange.
+    M % block == 0 (ops.py pads)."""
+    M = keep.shape[0]
+    out = pl.pallas_call(
+        _decode_add_bf16_kernel,
+        grid=(M // block,),
+        in_specs=[pl.BlockSpec((1, block), lambda j: (0, j)),
+                  pl.BlockSpec((1, block), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, block), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, M), keep.dtype),
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(keep[None], wire[None])
+    return out[0]
+
+
+def decode_add_int8_pallas(keep: jax.Array, q: jax.Array, scale: jax.Array,
+                           *, interpret: bool = False) -> jax.Array:
+    """keep [M] + int8 wire (q [M/128, 128], scale [M/128, 1]) → [M]:
+    per-block dequant fused into the accumulate, one launch."""
+    nb, C = q.shape
+    out = pl.pallas_call(
+        _decode_add_int8_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, C), lambda j: (j, 0)),
+                  pl.BlockSpec((1, C), lambda j: (j, 0)),
+                  pl.BlockSpec((1, 1), lambda j: (j, 0))],
+        out_specs=pl.BlockSpec((1, C), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, C), keep.dtype),
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(keep.reshape(nb, C), q, scale)
+    return out.reshape(-1)

@@ -1,4 +1,25 @@
-"""Public tree-reduce op: padding + interpret fallback."""
+"""Public tree-reduce ops: padding + interpret fallback + fused codecs.
+
+Besides the plain ``tree_reduce``, this module owns the *codec-fused*
+variants that collapse the wire-codec dequantize into the reduction /
+accumulate launch:
+
+  * ``encode_rows``       — per-row wire encoding of an [N, D] stack.
+  * ``coded_tree_reduce`` — H-tree sum of N wire-encoded rows without a
+    separate dequant pass (int8 dequants in VMEM; bf16 rides the f32
+    accumulator of the plain kernel).
+  * ``decode_add``        — ``keep + decode(wire)`` in one launch: the
+    receive side of every fractal halving exchange
+    (``core/collectives._codec_exchange_add``).
+
+Fusing drops one kernel launch per codec use, which is exactly the
+per-step α overhead ``core/autotune.CODEC_STEP_ALPHAS_FUSED`` prices —
+the calibrated bucket tuner picks the cheaper codecs up automatically.
+
+Off-TPU, ``decode_add`` is EXACTLY the jnp expression
+``keep + codec.decode(wire)`` so collective token/bit-identity tests are
+unaffected; ``interpret=True`` forces the kernel for parity tests.
+"""
 
 from __future__ import annotations
 
@@ -7,20 +28,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.compat import pallas_supported
+from repro.compat import import_pallas_kernels, on_tpu as _on_tpu
 
 from .ref import tree_reduce_ref
 
-try:
-    from .kernel import tree_reduce_pallas
-    _PALLAS_OK = pallas_supported()
-except Exception:  # pragma: no cover - exercised only on broken installs
-    tree_reduce_pallas = None
-    _PALLAS_OK = False
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+(tree_reduce_pallas, int8_tree_reduce_pallas, decode_add_bf16_pallas,
+ decode_add_int8_pallas, _PALLAS_OK) = import_pallas_kernels(
+    "repro.kernels.tree_reduce.kernel",
+    "tree_reduce_pallas", "int8_tree_reduce_pallas",
+    "decode_add_bf16_pallas", "decode_add_int8_pallas")
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -41,4 +57,106 @@ def tree_reduce(x: jax.Array, *, block: int = 512,
     return out[:D]
 
 
-__all__ = ["tree_reduce", "tree_reduce_ref"]
+# ---------------------------------------------------------------------------
+# fused wire codecs
+# ---------------------------------------------------------------------------
+
+_CODEC_BLOCK = 128          # int8 codec group == one TPU lane row
+
+
+def encode_rows(x: jax.Array, codec: str):
+    """Per-row wire encoding of an [N, D] stack of reduction operands.
+
+    Unlike ``optim.compression.Int8Codec.encode`` (which groups along the
+    leading axis of a flat payload), rows here are independent wire
+    messages, so int8 groups run along D: q [N, D/128, 128] int8 +
+    scale [N, D/128, 1] f32.  D must be a multiple of 128 for int8.
+    """
+    if codec == "none":
+        return {"x": x}
+    if codec == "bf16":
+        return {"x": x.astype(jnp.bfloat16)}
+    if codec == "int8":
+        N, D = x.shape
+        if D % _CODEC_BLOCK:
+            raise ValueError(f"D={D} not divisible by {_CODEC_BLOCK}")
+        xb = x.reshape(N, D // _CODEC_BLOCK, _CODEC_BLOCK)
+        scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+        safe = jnp.where(scale == 0, 1.0, scale)
+        q = jnp.clip(jnp.round(xb / safe), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(jnp.float32)}
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def _decode_rows(wire, codec: str, dtype):
+    if codec in ("none", "bf16"):
+        return wire["x"].astype(dtype)
+    q, scale = wire["q"], wire["scale"]
+    x = q.astype(dtype) * scale.astype(dtype)
+    return x.reshape(q.shape[0], -1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("codec", "block", "interpret"))
+def coded_tree_reduce(wire, codec: str, *, block: int = 512,
+                      interpret: bool | None = None) -> jax.Array:
+    """H-tree sum of N wire-encoded rows → [D] f32, dequant fused into the
+    reduction launch.  ``wire`` is ``encode_rows`` output; bf16 rows feed
+    the plain kernel's f32 accumulator directly, int8 rows dequant in VMEM.
+    The pairwise H-tree order is preserved (deterministic in N); int8 may
+    differ from decode-then-``tree_reduce`` by an ulp where the dequant
+    multiply fuses into the first add.
+    """
+    if not _PALLAS_OK:
+        return tree_reduce_ref(_decode_rows(wire, codec, jnp.float32))
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if codec == "int8":
+        q, scale = wire["q"], wire["scale"]
+        N = q.shape[0]
+        n2 = 1 << max(1, (N - 1).bit_length())
+        qp = jnp.pad(q, ((0, n2 - N), (0, 0), (0, 0)))
+        sp = jnp.pad(scale, ((0, n2 - N), (0, 0), (0, 0)))
+        return int8_tree_reduce_pallas(qp, sp, out_dtype=jnp.float32,
+                                       interpret=interpret)
+    x = wire["x"]
+    N, D = x.shape
+    n2 = 1 << max(1, (N - 1).bit_length())
+    block = min(block, 1 << (D - 1).bit_length() if D else block)
+    pd = (-D) % block
+    xp = jnp.pad(x, ((0, n2 - N), (0, pd)))
+    out = tree_reduce_pallas(xp, block=block, interpret=interpret,
+                             out_dtype=jnp.float32)
+    return out[:D]
+
+
+def decode_add(keep: jax.Array, wire, codec, *,
+               interpret: bool | None = None) -> jax.Array:
+    """``keep + codec.decode(wire)`` as ONE launch when the Pallas path is
+    live — the fused receive+accumulate of a fractal halving exchange.
+
+    ``codec`` is an ``optim.compression.Codec`` instance (its ``name``
+    selects the kernel; its ``decode`` is the fallback).  Off-TPU with
+    ``interpret=None`` this is EXACTLY ``keep + codec.decode(wire)`` —
+    bit-stable for the collective identity tests.  Flat f32/[M] payloads
+    only on the fused path; anything else falls back.
+    """
+    fused = _PALLAS_OK and (interpret if interpret is not None
+                            else _on_tpu())
+    if fused and keep.ndim == 1:
+        interpret = (not _on_tpu()) if interpret is None else interpret
+        M = keep.shape[0]
+        if codec.name == "bf16" and wire["x"].shape == (M,):
+            block = min(512, 1 << max(1, (M - 1).bit_length()))
+            if M % block == 0:
+                return decode_add_bf16_pallas(keep, wire["x"], block=block,
+                                              interpret=interpret)
+        if codec.name == "int8" and wire["q"].ndim == 2 \
+                and wire["q"].shape[0] * wire["q"].shape[1] == M:
+            return decode_add_int8_pallas(keep, wire["q"],
+                                          wire["scale"].reshape(-1, 1),
+                                          interpret=interpret)
+    return keep + codec.decode(wire, keep.shape, keep.dtype)
+
+
+__all__ = ["tree_reduce", "tree_reduce_ref", "encode_rows",
+           "coded_tree_reduce", "decode_add"]

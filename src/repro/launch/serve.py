@@ -20,6 +20,10 @@ comparison (see ``benchmarks/serve_bench.py``).
                         free blocks, prefix-cache sharing, preemption)
   --block-size B        paged: positions per physical block
   --kv-blocks N         paged: pool size (0 = match contiguous capacity)
+  --paged-kernel K      paged decode attention lowering: auto (fused Pallas
+                        kernel on TPU, gather oracle elsewhere) | pallas
+                        (force the fused kernel; interpret mode off-TPU) |
+                        ref (force the gather-then-attend oracle)
 """
 
 import argparse
@@ -48,6 +52,10 @@ def main(argv=None):
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="paged KV: physical blocks in the pool "
                          "(0 = match contiguous capacity)")
+    ap.add_argument("--paged-kernel", choices=("auto", "pallas", "ref"),
+                    default="auto",
+                    help="paged decode attention lowering (auto: fused "
+                         "Pallas kernel on TPU, gather oracle elsewhere)")
     ap.add_argument("--arrival", default="immediate",
                     help="immediate | poisson:RATE | trace:SPEC")
     ap.add_argument("--mode", choices=("continuous", "wave"),
@@ -101,7 +109,8 @@ def main(argv=None):
         seed=args.seed,
         kv_mode=args.kv_mode,
         block_size=args.block_size,
-        kv_blocks=args.kv_blocks)
+        kv_blocks=args.kv_blocks,
+        paged_kernel=args.paged_kernel)
 
     mesh = None
     if args.devices:

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+from repro.kernels.paged_attention.ops import (paged_attention,
+                                               paged_mla_attention)
 from . import act_sharding as ACT
 
 CHUNKED_ATTN_THRESHOLD = 8_192   # inference: online-softmax over KV chunks
@@ -268,12 +270,14 @@ def paged_scatter(pool, new, tables, offset):
     """Write ``new`` [B,T,...] at virtual positions [offset, offset+T)
     through ``tables`` [B, n] into ``pool`` [N, bs, ...].
 
-    ``offset`` is a scalar (chunked prefill; shared start) or, for T == 1
-    decode, a per-row [B] vector (slots at independent lengths).  Positions
-    beyond the table's span — end-padding of a short final prefill chunk —
-    are redirected to the SENTINEL block instead of clamping onto a live
-    block.  Masked decode rows carry an all-sentinel table row, so their
-    writes land in the sentinel block too.
+    ``offset`` is a scalar (chunked prefill; shared start) or a per-row
+    [B] vector (slots at independent lengths) — ragged multi-token writes
+    start each row's span at its own offset.  Positions beyond the
+    table's span — end-padding of a short final prefill chunk, or the
+    tail of a ragged row — are redirected to the SENTINEL block instead
+    of clamping onto a live block.  Masked decode rows carry an
+    all-sentinel table row, so their writes land in the sentinel block
+    too.
     """
     N, bs = pool.shape[:2]
     B, T = new.shape[:2]
@@ -282,10 +286,9 @@ def paged_scatter(pool, new, tables, offset):
     if off.ndim == 0:
         pos = off.astype(jnp.int32) + jnp.arange(T, dtype=jnp.int32)
         pos = jnp.broadcast_to(pos[None, :], (B, T))
-    elif T == 1:
-        pos = off.astype(jnp.int32)[:, None]
     else:
-        raise ValueError("multi-token paged writes need a scalar offset")
+        pos = off.astype(jnp.int32)[:, None] \
+            + jnp.arange(T, dtype=jnp.int32)[None, :]
     bi = pos // bs
     blk = jnp.take_along_axis(tables, jnp.clip(bi, 0, n - 1), axis=1)
     blk = jnp.where(bi < n, blk, PAGED_SENTINEL)
@@ -349,13 +352,16 @@ def init_attention(key, cfg: ArchConfig):
 
 def apply_attention(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
                     cache_offset=None, window=None, prefix_len=None,
-                    block_tables=None):
+                    block_tables=None, paged_kernel="ref"):
     """x: [B,T,D]. Returns (out [B,T,D], new_kv or None).
 
     kv_cache: dict(k=[B,S,Hkv,Dh], v=...) pre-allocated ring for decode;
     cache_offset: scalar current length (tokens already in cache).
     block_tables: paged mode — kv_cache leaves are pools [N, bs, Hkv, Dh]
-    and [B, n] tables map virtual positions onto physical blocks."""
+    and [B, n] tables map virtual positions onto physical blocks.
+    paged_kernel: "pallas" routes paged T==1 decode through the fused
+    block-table kernel (no gathered [B, n*bs, ...] view); "ref" keeps the
+    gather-then-attend oracle lowering."""
     B, T, D = x.shape
     H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = dense(p["wq"], x).reshape(B, T, H, Dh)
@@ -381,9 +387,17 @@ def apply_attention(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
                                    cache_offset)
             v_pool = paged_scatter(kv_cache["v"], v, block_tables,
                                    cache_offset)
+            new_kv = {"k": k_pool, "v": v_pool}
+            if T == 1 and paged_kernel == "pallas" and prefix_len is None:
+                # fused decode: the kernel walks block_tables directly and
+                # streams pool blocks; the [B, n*bs, ...] gather never exists
+                o = paged_attention(q, k_pool, v_pool, block_tables,
+                                    cache_offset, window=window,
+                                    softcap=cfg.attn_softcap)
+                out = dense(p["wo"], o.reshape(B, T, H * Dh))
+                return out, new_kv
             k_all = paged_gather(k_pool, block_tables)
             v_all = paged_gather(v_pool, block_tables)
-            new_kv = {"k": k_pool, "v": v_pool}
         else:
             k_all = _cache_update(kv_cache["k"], k, cache_offset)
             v_all = _cache_update(kv_cache["v"], v, cache_offset)
@@ -426,9 +440,10 @@ def init_mla(key, cfg: ArchConfig):
 
 
 def apply_mla(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
-              cache_offset=None, block_tables=None):
+              cache_offset=None, block_tables=None, paged_kernel="ref"):
     """Latent-cache MLA. Cache stores (c_kv, k_rope): [B,S,kv_lora(+rope)];
-    paged mode pools them as [N, bs, ...] addressed via block_tables."""
+    paged mode pools them as [N, bs, ...] addressed via block_tables.
+    paged_kernel="pallas" fuses paged T==1 absorbed decode (no gather)."""
     m: MLAConfig = cfg.mla
     B, T, D = x.shape
     H = cfg.num_heads
@@ -451,6 +466,20 @@ def apply_mla(p, cfg: ArchConfig, x, *, positions, kv_cache=None,
             kr_pool = paged_scatter(kv_cache["k_rope"], k_rope, block_tables,
                                     cache_offset)
             new_cache = {"c_kv": ckv_pool, "k_rope": kr_pool}
+            if T == 1 and paged_kernel == "pallas":
+                # fused absorbed decode in latent space, straight off the
+                # pools (the weight absorption of _mla_absorbed_decode with
+                # the gather + [B,S] latent view fused away; scores_sshard
+                # is a sharding hint only, skipped inside the kernel path)
+                w_up = p["kv_up"]["w"].reshape(m.kv_lora_rank, H, dn + dv)
+                w_k, w_v = w_up[..., :dn], w_up[..., dn:]
+                q_eff = jnp.einsum("bthd,rhd->bthr", q_nope, w_k)
+                o_lat = paged_mla_attention(
+                    q_eff, q_rope, ckv_pool, kr_pool, block_tables,
+                    cache_offset, scale=1.0 / math.sqrt(dn + dr))
+                o = jnp.einsum("bthr,rhd->bthd", o_lat, w_v)
+                out = dense(p["wo"], o.reshape(B, T, H * dv))
+                return out, new_cache
             c_kv = paged_gather(ckv_pool, block_tables)
             k_rope = paged_gather(kr_pool, block_tables)
         else:

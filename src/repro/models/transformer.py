@@ -104,7 +104,8 @@ def init_block(key, cfg: ArchConfig, kind: str):
 
 
 def apply_block(p, cfg: ArchConfig, kind: str, h, *, positions,
-                cache=None, offset=None, prefix_len=None, block_tables=None):
+                cache=None, offset=None, prefix_len=None, block_tables=None,
+                paged_kernel="ref"):
     """Returns (h, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     if kind in XLSTM_KINDS:
@@ -121,11 +122,12 @@ def apply_block(p, cfg: ArchConfig, kind: str, h, *, positions,
         mix, new_cache = L.apply_attention(
             p["attn"], cfg, x, positions=positions, kv_cache=cache,
             cache_offset=offset, window=window, prefix_len=prefix_len,
-            block_tables=block_tables)
+            block_tables=block_tables, paged_kernel=paged_kernel)
     elif kind in MLA_KINDS:
         mix, new_cache = L.apply_mla(p["attn"], cfg, x, positions=positions,
                                      kv_cache=cache, cache_offset=offset,
-                                     block_tables=block_tables)
+                                     block_tables=block_tables,
+                                     paged_kernel=paged_kernel)
     else:  # mamba
         mix, new_cache = S.mamba_forward(p["mamba"], cfg, x, cache)
     if sandwich:
@@ -277,7 +279,8 @@ def _embed(params, cfg: ArchConfig, tokens, frontend_embeds=None,
 
 
 def _run_segments(params, cfg: ArchConfig, h, *, positions, caches=None,
-                  offset=None, prefix_len=None, block_tables=None):
+                  offset=None, prefix_len=None, block_tables=None,
+                  paged_kernel="ref"):
     """Scan each segment's stacked unit over its repeats."""
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -294,7 +297,7 @@ def _run_segments(params, cfg: ArchConfig, h, *, positions, caches=None,
                 h, nc, aux = apply_block(
                     p_unit[f"l{j}"], cfg, kind, h, positions=positions,
                     cache=c, offset=offset, prefix_len=prefix_len,
-                    block_tables=block_tables)
+                    block_tables=block_tables, paged_kernel=paged_kernel)
                 new_c[f"l{j}"] = nc
                 aux_sum = aux_sum + aux
             return ACT.hidden(h), (new_c, aux_sum)
@@ -440,11 +443,13 @@ def prefill(params, cfg: ArchConfig, tokens, cache, frontend_embeds=None):
 
 
 def decode_step(params, cfg: ArchConfig, token, cache, offset,
-                block_tables=None):
+                block_tables=None, paged_kernel="ref"):
     """token: [B,1] ints; offset: tokens-already-cached — a scalar shared by
     the batch, or a per-row [B] vector (serve slots at independent lengths
     inside one batched decode step).  ``block_tables`` [B, n] switches the
-    cache to the paged layout (pooled leaves, see ``init_paged_cache``)."""
+    cache to the paged layout (pooled leaves, see ``init_paged_cache``);
+    ``paged_kernel="pallas"`` routes paged attention through the fused
+    block-table decode kernel instead of gather-then-attend."""
     B = token.shape[0]
     off = jnp.asarray(offset)
     if off.ndim == 1:
@@ -454,7 +459,8 @@ def decode_step(params, cfg: ArchConfig, token, cache, offset,
     h = _embed(params, cfg, token, positions=positions)
     h, new_caches, _ = _run_segments(params, cfg, h, positions=positions,
                                      caches=cache, offset=offset,
-                                     block_tables=block_tables)
+                                     block_tables=block_tables,
+                                     paged_kernel=paged_kernel)
     h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
     return _head(params, cfg, h), new_caches
 

@@ -88,6 +88,10 @@ class EngineConfig:
     block_size: int = 16         # paged: positions per physical block
     kv_blocks: int = 0           # paged: pool size (0 = match contiguous
                                  # capacity: 1 + max_slots * max_len / bs)
+    paged_kernel: str = "auto"   # paged decode attention lowering:
+                                 # "pallas" (fused block-table kernel) |
+                                 # "ref" (gather-then-attend oracle) |
+                                 # "auto" (pallas on TPU, ref elsewhere)
 
 
 def _check_arch(cfg: ArchConfig, *, allow_recurrent: bool = False) -> None:
@@ -151,7 +155,21 @@ class ServeEngine:
             raise ValueError("prefill_chunk must be >= 1")
         if ecfg.kv_mode not in ("contiguous", "paged"):
             raise ValueError(f"unknown kv_mode {ecfg.kv_mode!r}")
+        if ecfg.paged_kernel not in ("auto", "pallas", "ref"):
+            raise ValueError(f"unknown paged_kernel {ecfg.paged_kernel!r}")
         self.paged = ecfg.kv_mode == "paged"
+        # "auto" takes the fused kernel only where it runs natively: on TPU
+        # with live Pallas dispatch.  Elsewhere it stays on the gather
+        # oracle (interpret-mode kernels would crawl); explicit "pallas"
+        # forces the kernel anywhere (interpret off-TPU) so parity tests
+        # can pin fused-vs-ref token identity on any host.
+        if ecfg.paged_kernel == "auto":
+            from repro.compat import on_tpu
+            from repro.kernels import kernels_backend
+            self.paged_kernel = ("pallas" if on_tpu()
+                                 and kernels_backend() == "pallas" else "ref")
+        else:
+            self.paged_kernel = ecfg.paged_kernel
         # a padded chunk must fit the cache row (a clamped dynamic-slice
         # write would silently shift over live positions)
         self._chunk = min(ecfg.prefill_chunk, ecfg.max_len)
@@ -214,9 +232,10 @@ class ServeEngine:
         self.cache = cache
 
         if self.paged:
+            pk = self.paged_kernel
             self._decode = jax.jit(
                 lambda p, tok, c, off, bt: T.decode_step(
-                    p, cfg, tok, c, off, block_tables=bt))
+                    p, cfg, tok, c, off, block_tables=bt, paged_kernel=pk))
 
             # admission prefill addresses the pool through the slot's own
             # [1, n_max] table row — no slot slicing needed

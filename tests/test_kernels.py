@@ -19,9 +19,15 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.gemm.ops import gemm
 from repro.kernels.gemm.ref import gemm_ref
-from repro.kernels.tree_reduce.ops import tree_reduce
+from repro.kernels.paged_attention.ops import (paged_attention,
+                                               paged_mla_attention)
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                               paged_mla_attention_ref)
+from repro.kernels.tree_reduce.ops import (coded_tree_reduce, decode_add,
+                                           encode_rows, tree_reduce)
 from repro.kernels.tree_reduce.ref import linear_reduce_ref, tree_reduce_ref
-from repro.models.layers import gqa_attention
+from repro.models.layers import gqa_attention, paged_gather
+from repro.optim.compression import CODECS
 
 RNG = np.random.default_rng(42)
 
@@ -137,3 +143,168 @@ def test_tree_reduce_bitwise_deterministic_order():
     ref_lin = np.asarray(linear_reduce_ref(x))
     assert not np.array_equal(ref_tree, ref_lin) or np.allclose(ref_tree,
                                                                 ref_lin)
+
+
+# ------------------------------------------------------- paged attention --
+#
+# The fused decode kernel walks block tables directly; its oracle is the
+# gather-then-attend reference (the paged_kernel="ref" lowering).  Cases pin
+# ragged per-row lengths, sentinel-padded table tails, lengths that stop
+# mid-block (block-edge straddles), GQA grouping, and softcap/window.
+
+
+def _paged_case(dtype, seed=0, B=3, n=4, N=9, bs=4, Hkv=2, G=3, d=16, dv=16):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, 1, Hkv * G, d)), dtype=dtype)
+    kp = jnp.asarray(rng.normal(size=(N, bs, Hkv, d)), dtype=dtype)
+    vp = jnp.asarray(rng.normal(size=(N, bs, Hkv, dv)), dtype=dtype)
+    tables = jnp.asarray(rng.integers(1, N, size=(B, n)), dtype=jnp.int32)
+    # sentinel-padded tails + ragged lengths: row 0 full-ish and straddling
+    # a block edge (13 % bs != 0), row 1 short with a sentinel tail, row 2
+    # minimal (single cached token)
+    tables = tables.at[1, 2:].set(0)
+    offset = jnp.asarray([13, 6, 0], jnp.int32)
+    return q, kp, vp, tables, offset
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,softcap",
+                         [(None, None), (5, None), (None, 8.0), (6, 4.0)])
+def test_paged_attention_parity(dtype, window, softcap):
+    q, kp, vp, tables, offset = _paged_case(dtype)
+    out = paged_attention(q, kp, vp, tables, offset, window=window,
+                          softcap=softcap)
+    B, _, Hq, d = q.shape
+    Hkv = kp.shape[2]
+    qh = q[:, 0].reshape(B, Hkv, Hq // Hkv, d)
+    ref = paged_attention_ref(qh, kp, vp, tables, offset + 1,
+                              scale=1.0 / np.sqrt(d), window=window,
+                              softcap=softcap).reshape(out.shape)
+    assert out.dtype == q.dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_paged_attention_matches_gather_then_gqa():
+    """Against the PRODUCTION ref lowering: paged_gather materializes the
+    virtual view, gqa_attention masks causally by per-row positions."""
+    q, kp, vp, tables, offset = _paged_case(jnp.float32, seed=1)
+    out = paged_attention(q, kp, vp, tables, offset)
+    k_all = paged_gather(kp, tables)
+    v_all = paged_gather(vp, tables)
+    S = k_all.shape[1]
+    pos_k = jnp.arange(S, dtype=jnp.int32)[None, :]
+    ref = gqa_attention(q, k_all, v_all, pos_q=offset[:, None], pos_k=pos_k,
+                        causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_ignores_sentinel_and_unreferenced_blocks():
+    """Poisoning the sentinel block and every unreferenced pool block must
+    not move the output by a single bit — the masking (and the kernel's
+    block walk) never lets those values in."""
+    q, kp, vp, tables, offset = _paged_case(jnp.float32, seed=2)
+    out = paged_attention(q, kp, vp, tables, offset)
+    live = set()
+    for b in range(tables.shape[0]):
+        nblk = -(-int(offset[b] + 1) // kp.shape[1])
+        live |= set(np.asarray(tables[b, :nblk]).tolist())
+    poison = [i for i in range(kp.shape[0]) if i not in (live - {0})]
+    kp2 = kp.at[jnp.asarray(poison)].set(1e9)
+    vp2 = vp.at[jnp.asarray(poison)].set(1e9)
+    out2 = paged_attention(q, kp2, vp2, tables, offset)
+    assert np.array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_paged_attention_invariant_to_block_placement():
+    """The same logical KV content scattered to different physical blocks
+    (scrambled tables) must attend identically."""
+    q, kp, vp, tables, offset = _paged_case(jnp.float32, seed=3)
+    N, n = kp.shape[0], tables.shape[1]
+    out = paged_attention(q, kp, vp, tables, offset)
+    perm = np.concatenate([[0], 1 + np.random.default_rng(9).permutation(
+        N - 1)]).astype(np.int32)          # sentinel block 0 stays put
+    inv = np.argsort(perm).astype(np.int32)
+    kp2 = kp[jnp.asarray(inv)]
+    vp2 = vp[jnp.asarray(inv)]
+    tables2 = jnp.asarray(perm)[tables]
+    out2 = paged_attention(q, kp2, vp2, tables2, offset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_paged_attention_rejects_multi_token():
+    q, kp, vp, tables, offset = _paged_case(jnp.float32)
+    q2 = jnp.concatenate([q, q], axis=1)
+    with pytest.raises(ValueError, match="decode-only"):
+        paged_attention(q2, kp, vp, tables, offset)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_mla_attention_parity(dtype):
+    rng = np.random.default_rng(5)
+    B, n, N, bs, H, r, dr = 3, 4, 9, 4, 4, 24, 8
+    qe = jnp.asarray(rng.normal(size=(B, 1, H, r)), dtype=dtype)
+    qr = jnp.asarray(rng.normal(size=(B, 1, H, dr)), dtype=dtype)
+    ckv = jnp.asarray(rng.normal(size=(N, bs, r)), dtype=dtype)
+    krp = jnp.asarray(rng.normal(size=(N, bs, 1, dr)), dtype=dtype)
+    tables = jnp.asarray(rng.integers(1, N, size=(B, n)), dtype=jnp.int32)
+    tables = tables.at[2, 1:].set(0)
+    offset = jnp.asarray([13, 6, 2], jnp.int32)
+    scale = 1.0 / np.sqrt(32 + dr)
+    out = paged_mla_attention(qe, qr, ckv, krp, tables, offset, scale=scale)
+    ref = paged_mla_attention_ref(qe[:, 0], qr[:, 0], ckv, krp[:, :, 0, :],
+                                  tables, offset + 1, scale=scale)[:, None]
+    assert out.shape == (B, 1, H, r)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+    # sentinel poisoning is invisible through the latent pools too
+    live = {int(t) for b in range(B)
+            for t in np.asarray(tables[b, :-(-int(offset[b] + 1) // bs)])}
+    poison = [i for i in range(N) if i not in (live - {0})]
+    out2 = paged_mla_attention(qe, qr, ckv.at[jnp.asarray(poison)].set(1e9),
+                               krp.at[jnp.asarray(poison)].set(1e9),
+                               tables, offset, scale=scale)
+    assert np.array_equal(np.asarray(out, np.float32),
+                          np.asarray(out2, np.float32))
+
+
+# ------------------------------------------------- codec-fused tree sum --
+
+
+@pytest.mark.parametrize("codec", ["none", "bf16", "int8"])
+@pytest.mark.parametrize("n,d", [(2, 128), (6, 384), (16, 512)])
+def test_coded_tree_reduce_parity(codec, n, d):
+    """Fused dequant+reduce == decode rows, then the plain tree_reduce
+    (same H-tree order; int8 may differ by an FMA ulp)."""
+    x = jnp.asarray(RNG.normal(size=(n, d)), dtype=jnp.float32)
+    wire = encode_rows(x, codec)
+    out = coded_tree_reduce(wire, codec)
+    if codec == "int8":
+        rows = (wire["q"].astype(jnp.float32)
+                * wire["scale"]).reshape(n, d)
+    else:
+        rows = wire["x"].astype(jnp.float32)
+    ref = tree_reduce(rows)
+    assert out.dtype == jnp.float32 and out.shape == (d,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_decode_add_fused_matches_unfused(codec):
+    """The fused receive-side accumulate == keep + codec.decode(wire), and
+    with default dispatch (off-TPU) it IS that expression bit for bit."""
+    rng = np.random.default_rng(11)
+    keep = jnp.asarray(rng.normal(size=(1024,)), dtype=jnp.float32)
+    send = jnp.asarray(rng.normal(size=(1024,)), dtype=jnp.float32)
+    c = CODECS[codec]
+    wire = c.encode(send)
+    plain = keep + c.decode(wire, keep.shape, keep.dtype)
+    fused = decode_add(keep, wire, c, interpret=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(plain),
+                               rtol=1e-6, atol=1e-6)
+    if jax.default_backend() != "tpu":
+        assert np.array_equal(np.asarray(decode_add(keep, wire, c)),
+                              np.asarray(plain))
