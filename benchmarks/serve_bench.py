@@ -107,13 +107,16 @@ def _mesh_for(devices, max_slots):
     return make_mesh((devices,), ("data",))
 
 
-def bench_cell(cfg, params, max_slots, n, prompt_len, gen_lo, gen_hi):
+def bench_cell(cfg, params, max_slots, n, prompt_len, gen_lo, gen_hi,
+               clock="wall"):
     from repro.serve import EngineConfig, ServeEngine, serve_waves
 
     ecfg = EngineConfig(max_slots=max_slots,
                         max_len=prompt_len + gen_hi + 1,
                         prefill_chunk=prompt_len,
-                        chunks_per_step=2)
+                        chunks_per_step=2,
+                        clock=clock)    # wall: measured tok/s; step (smoke):
+                                        # deterministic TTFT columns in CI
     requests = make_requests(cfg, n, prompt_len, gen_lo, gen_hi)
 
     engine = ServeEngine(cfg, params, ecfg)
@@ -144,7 +147,7 @@ def bench_cell(cfg, params, max_slots, n, prompt_len, gen_lo, gen_hi):
     return cont, wave
 
 
-def bench_paged_cell(cfg, params, cell, devices=0):
+def bench_paged_cell(cfg, params, cell, devices=0, clock="wall"):
     from repro.serve import EngineConfig, ServeEngine
 
     max_len, bs, contig_slots, paged_slots, short, long = cell
@@ -155,11 +158,12 @@ def bench_paged_cell(cfg, params, cell, devices=0):
 
     contig_cfg = EngineConfig(
         max_slots=contig_slots, max_len=max_len, prefill_chunk=chunk,
-        chunks_per_step=2)
+        chunks_per_step=2, clock=clock)
     paged_cfg = EngineConfig(
         max_slots=paged_slots, max_len=max_len, prefill_chunk=chunk,
         chunks_per_step=2, kv_mode="paged", block_size=bs,
-        kv_blocks=usable + 1)                # +1: the sentinel block
+        kv_blocks=usable + 1,                # +1: the sentinel block
+        clock=clock)
 
     cont = ServeEngine(cfg, params, contig_cfg,
                        mesh=_mesh_for(devices, contig_slots))
@@ -206,12 +210,15 @@ def run(smoke: bool = False, kv_mode: str = "all", devices: int = 0) -> None:
 
     cfg = get_config("gemma2-2b-smoke")
     params = T.init_params(cfg, jax.random.key(0))
+    # smoke (CI) runs on the virtual step clock — deterministic timing
+    # columns; full runs measure real wall seconds
+    clock = "step" if smoke else "wall"
     if kv_mode in ("all", "contiguous"):
         cells = SMOKE_CELLS if smoke else CELLS
         print("serve/cell,mode,steps,occupancy,tok_per_step,ttft_p50,"
               "wall_tok_s")
         for cell in cells:
-            bench_cell(cfg, params, *cell)
+            bench_cell(cfg, params, *cell, clock=clock)
         print("serve/claim,ok,continuous admission beats wave baseline on "
               "occupancy AND tokens/step (outputs token-identical)")
     if kv_mode in ("all", "paged"):
@@ -219,7 +226,8 @@ def run(smoke: bool = False, kv_mode: str = "all", devices: int = 0) -> None:
         print("serve/cell,mode,steps,peak_active,occupancy,tok_per_step,"
               "hit_rate,blocks_peak,preempt")
         for cell in cells:
-            bench_paged_cell(cfg, params, cell, devices=devices)
+            bench_paged_cell(cfg, params, cell, devices=devices,
+                             clock=clock)
         print("serve/claim,ok,paged KV serves the ragged mix at strictly "
               "higher concurrency than contiguous under an equal HBM "
               "budget (outputs token-identical)")

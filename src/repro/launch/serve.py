@@ -6,11 +6,15 @@
       [--arrival poisson:50] [--eos-id 2] [--devices 8] [--mode wave]
 
 Built on ``repro.serve``: a fixed pool of ``--max-slots`` decode slots over
-one shared KV cache; queued requests are admitted the moment EOS (or the
+one shared cache; queued requests are admitted the moment EOS (or the
 per-request budget) frees capacity, with chunked prefill interleaved
-between decode steps.  Reports per-request TTFT, per-step throughput and
-slot occupancy.  ``--mode wave`` runs the old wave-at-a-time loop for A/B
-comparison (see ``benchmarks/serve_bench.py``).
+between decode steps.  Per-layer decode state goes through the SlotState
+protocol, so every token-only architecture serves — pure attention, pure
+recurrent (mamba / xLSTM), and hybrids (Jamba) mixing KV and recurrent
+backends in one run.  Reports per-request TTFT, per-step throughput and
+slot occupancy.  ``--mode wave`` runs the old wave-at-a-time loop — the
+token-identity test oracle — for A/B comparison (see
+``benchmarks/serve_bench.py``).
 
   --arrival immediate | poisson:RATE | trace:SPEC   synthetic arrivals
   --gen-spread K        ragged output budgets: gen drawn from [gen-K, gen]
@@ -24,6 +28,14 @@ comparison (see ``benchmarks/serve_bench.py``).
                         kernel on TPU, gather oracle elsewhere) | pallas
                         (force the fused kernel; interpret mode off-TPU) |
                         ref (force the gather-then-attend oracle)
+  --slot-state M        KV-layer backend override: auto (follow --kv-mode) |
+                        contiguous | paged; recurrent layers always use the
+                        recurrent-row backend
+  --rec-slots R         recurrent-state rows (0 = match --max-slots); fewer
+                        rows than slots makes rows the scarce admission
+                        resource
+  --clock C             step (virtual, deterministic; idle gaps jump) |
+                        wall (measured seconds; idle gaps really sleep)
 """
 
 import argparse
@@ -56,6 +68,16 @@ def main(argv=None):
                     default="auto",
                     help="paged decode attention lowering (auto: fused "
                          "Pallas kernel on TPU, gather oracle elsewhere)")
+    ap.add_argument("--slot-state", choices=("auto", "contiguous", "paged"),
+                    default="auto",
+                    help="KV-layer backend override (auto: follow "
+                         "--kv-mode); recurrent layers always use the "
+                         "recurrent-row backend")
+    ap.add_argument("--rec-slots", type=int, default=0,
+                    help="recurrent-state rows (0 = match --max-slots)")
+    ap.add_argument("--clock", choices=("step", "wall"), default="step",
+                    help="serve clock: step (virtual, deterministic) or "
+                         "wall (measured seconds, idle gaps sleep)")
     ap.add_argument("--arrival", default="immediate",
                     help="immediate | poisson:RATE | trace:SPEC")
     ap.add_argument("--mode", choices=("continuous", "wave"),
@@ -108,9 +130,12 @@ def main(argv=None):
         eos_id=args.eos_id,
         seed=args.seed,
         kv_mode=args.kv_mode,
+        slot_state=args.slot_state,
+        rec_slots=args.rec_slots,
         block_size=args.block_size,
         kv_blocks=args.kv_blocks,
-        paged_kernel=args.paged_kernel)
+        paged_kernel=args.paged_kernel,
+        clock=args.clock)
 
     mesh = None
     if args.devices:
@@ -133,6 +158,9 @@ def main(argv=None):
         results, metrics = serve_waves(cfg, params, ecfg, requests)
     else:
         engine = ServeEngine(cfg, params, ecfg, mesh=mesh)
+        print(f"slot-state plan: {engine.plan.describe()}"
+              + (f" ({engine.rec.capacity} recurrent rows)"
+                 if engine.rec is not None else ""))
         results = engine.run(requests)
         metrics = engine.metrics
 

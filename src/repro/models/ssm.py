@@ -32,10 +32,16 @@ from .layers import _dtype, _init_dense, dense, init_rmsnorm, rms_norm
 # ---------------------------------------------------------------------------
 
 
-def _causal_conv(x, w, state=None):
+def _causal_conv(x, w, state=None, update_mask=None):
     """Depthwise causal 1D conv. x: [B,T,C], w: [K,C].
 
-    state: [B,K-1,C] previous inputs (decode); returns (y, new_state)."""
+    state: [B,K-1,C] previous inputs (decode); returns (y, new_state).
+
+    update_mask: optional [B,T] bool PREFIX mask — row b consumed only its
+    first ``valid_b = mask.sum()`` tokens; the returned state is the last
+    K-1 stream inputs as of token ``valid_b - 1`` (rows with valid_b == 0
+    keep their incoming state).  Outputs at masked positions are garbage
+    and must not be read."""
     K = w.shape[0]
     if state is None:
         pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
@@ -44,8 +50,27 @@ def _causal_conv(x, w, state=None):
     xp = jnp.concatenate([pad, x], axis=1)        # [B, T+K-1, C]
     y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
             for i in range(K))
-    new_state = xp[:, -(K - 1):, :] if K > 1 else pad
+    if K == 1:
+        new_state = pad
+    elif update_mask is None:
+        new_state = xp[:, -(K - 1):, :]
+    else:
+        # token t of row b sits at xp[b, K-1+t]; after valid_b tokens the
+        # last K-1 stream inputs occupy xp[b, valid_b : valid_b+K-1]
+        valid = jnp.sum(update_mask.astype(jnp.int32), axis=1)     # [B]
+        idx = valid[:, None] + jnp.arange(K - 1, dtype=jnp.int32)[None, :]
+        new_state = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     return y, new_state
+
+
+def _gate_carry(mask_t, new, old):
+    """Per-row scan-carry gate: keep ``new`` where mask_t [B] is True.
+    Rows gated off retain their incoming recurrent state bit-for-bit —
+    the primitive behind masked chunked prefill and batched decode with
+    inactive slots."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(
+            mask_t.reshape((-1,) + (1,) * (a.ndim - 1)), a, b), new, old)
 
 
 def _softplus(x):
@@ -113,8 +138,12 @@ def _mamba_scan_step(A, x_t, dt_t, B_t, C_t, h):
     return h, y
 
 
-def mamba_forward(p, cfg: ArchConfig, u, state=None):
-    """u: [B,T,D] → (y [B,T,D], cache{conv,h})."""
+def mamba_forward(p, cfg: ArchConfig, u, state=None, update_mask=None):
+    """u: [B,T,D] → (y [B,T,D], cache{conv,h}).
+
+    update_mask: optional [B,T] bool prefix mask — state advances only over
+    masked-True steps per row (masked-off outputs are garbage, never read).
+    """
     s: SSMConfig = cfg.ssm
     B_, T, D = u.shape
     d_in = s.expand * D
@@ -122,7 +151,7 @@ def mamba_forward(p, cfg: ArchConfig, u, state=None):
     xz = dense(p["in_proj"], u)
     x, z = jnp.split(xz, 2, axis=-1)
     conv_state = None if state is None else state["conv"]
-    x, new_conv = _causal_conv(x, p["conv_w"], conv_state)
+    x, new_conv = _causal_conv(x, p["conv_w"], conv_state, update_mask)
     x = jax.nn.silu(x + p["conv_b"])
 
     proj = dense(p["x_proj"], x)
@@ -136,13 +165,20 @@ def mamba_forward(p, cfg: ArchConfig, u, state=None):
     h0 = (jnp.zeros((B_, d_in, s.d_state), jnp.float32) if state is None
           else state["h"])
 
-    def body(h, t_slice):
-        x_t, dt_t, B_t, C_t = t_slice
-        h, y = _mamba_scan_step(A, x_t, dt_t, B_t, C_t, h)
-        return h, y
-
     xs = (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(dt_full, 1, 0),
           jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    if update_mask is None:
+        def body(h, t_slice):
+            x_t, dt_t, B_t, C_t = t_slice
+            h, y = _mamba_scan_step(A, x_t, dt_t, B_t, C_t, h)
+            return h, y
+    else:
+        xs = xs + (jnp.moveaxis(update_mask, 1, 0),)
+
+        def body(h, t_slice):
+            x_t, dt_t, B_t, C_t, m_t = t_slice
+            h_new, y = _mamba_scan_step(A, x_t, dt_t, B_t, C_t, h)
+            return _gate_carry(m_t, h_new, h), y
     h_final, ys = chunked_scan(body, h0, xs)
     y = jnp.moveaxis(ys, 0, 1) + x32 * p["D"][None, None, :]
     y = (y.astype(u.dtype)) * jax.nn.silu(z)
@@ -207,7 +243,7 @@ def _mlstm_cell_step(q_t, k_t, v_t, i_t, f_t, state):
     return (C, n, m_new), h
 
 
-def mlstm_forward(p, cfg: ArchConfig, u, state=None):
+def mlstm_forward(p, cfg: ArchConfig, u, state=None, update_mask=None):
     s: SSMConfig = cfg.ssm
     B_, T, D = u.shape
     d_in = s.expand * D
@@ -216,7 +252,7 @@ def mlstm_forward(p, cfg: ArchConfig, u, state=None):
     x = rms_norm(p["norm"], u, cfg.norm_eps)
     xm, z = jnp.split(dense(p["up_proj"], x), 2, axis=-1)
     conv_state = None if state is None else state["conv"]
-    xc, new_conv = _causal_conv(xm, p["conv_w"], conv_state)
+    xc, new_conv = _causal_conv(xm, p["conv_w"], conv_state, update_mask)
     xc = jax.nn.silu(xc + p["conv_b"])
     xch = xc.reshape(B_, T, NH, dh)
     xmh = xm.reshape(B_, T, NH, dh)
@@ -234,14 +270,25 @@ def mlstm_forward(p, cfg: ArchConfig, u, state=None):
     else:
         C0, n0, m0 = state["C"], state["n"], state["m"]
 
-    def body(carry, t_slice):
-        q_t, k_t, v_t, i_t, f_t = t_slice
-        carry, h = _mlstm_cell_step(q_t.astype(jnp.float32),
-                                    k_t.astype(jnp.float32),
-                                    v_t.astype(jnp.float32), i_t, f_t, carry)
-        return carry, h
-
     xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_pre, f_pre))
+    if update_mask is None:
+        def body(carry, t_slice):
+            q_t, k_t, v_t, i_t, f_t = t_slice
+            carry, h = _mlstm_cell_step(q_t.astype(jnp.float32),
+                                        k_t.astype(jnp.float32),
+                                        v_t.astype(jnp.float32),
+                                        i_t, f_t, carry)
+            return carry, h
+    else:
+        xs = xs + (jnp.moveaxis(update_mask, 1, 0),)
+
+        def body(carry, t_slice):
+            q_t, k_t, v_t, i_t, f_t, m_t = t_slice
+            new, h = _mlstm_cell_step(q_t.astype(jnp.float32),
+                                      k_t.astype(jnp.float32),
+                                      v_t.astype(jnp.float32),
+                                      i_t, f_t, carry)
+            return _gate_carry(m_t, new, carry), h
     (C, n, m), hs = chunked_scan(body, (C0, n0, m0), xs)
     h = jnp.moveaxis(hs, 0, 1).reshape(B_, T, d_in).astype(u.dtype)
     h = rms_norm(p["out_norm"], h, cfg.norm_eps) + p["skip"] * xc
@@ -307,11 +354,11 @@ def _slstm_cell_step(p, cfg, wx_t, carry):
     return (c, n, h_new, m_new), h_new
 
 
-def slstm_forward(p, cfg: ArchConfig, u, state=None):
+def slstm_forward(p, cfg: ArchConfig, u, state=None, update_mask=None):
     B_, T, D = u.shape
     x = rms_norm(p["norm"], u, cfg.norm_eps)
     conv_state = None if state is None else state["conv"]
-    xc, new_conv = _causal_conv(x, p["conv_w"], conv_state)
+    xc, new_conv = _causal_conv(x, p["conv_w"], conv_state, update_mask)
     xc = jax.nn.silu(xc + p["conv_b"])
     wx = dense(p["w_gates"], xc).astype(jnp.float32)     # [B,T,4D]
 
@@ -321,10 +368,17 @@ def slstm_forward(p, cfg: ArchConfig, u, state=None):
     else:
         carry = (state["c"], state["n"], state["h"], state["m"])
 
-    def body(carry, wx_t):
-        return _slstm_cell_step(p, cfg, wx_t, carry)
-
-    carry, hs = chunked_scan(body, carry, jnp.moveaxis(wx, 1, 0))
+    if update_mask is None:
+        def body(carry, wx_t):
+            return _slstm_cell_step(p, cfg, wx_t, carry)
+        xs = jnp.moveaxis(wx, 1, 0)
+    else:
+        def body(carry, t_slice):
+            wx_t, m_t = t_slice
+            new, h = _slstm_cell_step(p, cfg, wx_t, carry)
+            return _gate_carry(m_t, new, carry), h
+        xs = (jnp.moveaxis(wx, 1, 0), jnp.moveaxis(update_mask, 1, 0))
+    carry, hs = chunked_scan(body, carry, xs)
     c, n, h, m = carry
     y = jnp.moveaxis(hs, 0, 1).astype(u.dtype)
     y = rms_norm(p["group_norm"], y, cfg.norm_eps)

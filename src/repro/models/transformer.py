@@ -62,6 +62,20 @@ MLA_KINDS = ("mla", "mla_moe")
 MAMBA_KINDS = ("mamba", "mamba_moe")
 XLSTM_KINDS = ("mlstm", "slstm")
 MOE_KINDS = ("attn_moe", "mla_moe", "mamba_moe")
+# the SlotState split: positional (KV) caches are addressed by slot row /
+# block table, recurrent caches by a pooled state row (``rec_rows``)
+REC_KINDS = MAMBA_KINDS + XLSTM_KINDS
+
+
+def has_recurrent(cfg: ArchConfig) -> bool:
+    """True if any layer carries O(1) recurrent state (mamba / xLSTM)."""
+    return any(k in REC_KINDS for unit, _ in cfg.segments() for k in unit)
+
+
+def has_attention(cfg: ArchConfig) -> bool:
+    """True if any layer carries a positional KV cache (attention / MLA)."""
+    return any(k in ATTN_KINDS or k in MLA_KINDS
+               for unit, _ in cfg.segments() for k in unit)
 
 
 # ---------------------------------------------------------------------------
@@ -103,14 +117,40 @@ def init_block(key, cfg: ArchConfig, kind: str):
     return p
 
 
+def _gather_rec(cache, rec_rows):
+    """View of the pooled recurrent state at rows ``rec_rows`` [B]."""
+    return jax.tree.map(lambda x: x[rec_rows], cache)
+
+
+def _scatter_rec(cache, new_state, rec_rows):
+    """Write per-row state back into the pool.  Rows gated off by the
+    update mask carry their own gathered value, so duplicate sentinel
+    indices (row 0 for every masked batch row) all write identical bits —
+    the scatter stays deterministic."""
+    return jax.tree.map(
+        lambda full, ns: full.at[rec_rows].set(ns.astype(full.dtype)),
+        cache, new_state)
+
+
 def apply_block(p, cfg: ArchConfig, kind: str, h, *, positions,
                 cache=None, offset=None, prefix_len=None, block_tables=None,
-                paged_kernel="ref"):
-    """Returns (h, new_cache, aux_loss)."""
+                paged_kernel="ref", rec_rows=None, update_mask=None):
+    """Returns (h, new_cache, aux_loss).
+
+    ``rec_rows`` [B] addresses pooled recurrent state (serve engine): the
+    block gathers each batch row's state from the pool, advances it, and
+    scatters it back.  ``update_mask`` [B,T] prefix-gates the advance per
+    row (chunk padding / inactive decode slots); attention layers ignore
+    it — their masked writes land on causally-hidden positions instead."""
     aux = jnp.zeros((), jnp.float32)
     if kind in XLSTM_KINDS:
         fwd = S.mlstm_forward if kind == "mlstm" else S.slstm_forward
-        h, new_state = fwd(p["cell"], cfg, h, cache)
+        state = cache
+        if cache is not None and rec_rows is not None:
+            state = _gather_rec(cache, rec_rows)
+        h, new_state = fwd(p["cell"], cfg, h, state, update_mask=update_mask)
+        if cache is not None and rec_rows is not None:
+            new_state = _scatter_rec(cache, new_state, rec_rows)
         return h, new_state, aux
 
     sandwich = cfg.norm_style == "sandwich"
@@ -129,7 +169,13 @@ def apply_block(p, cfg: ArchConfig, kind: str, h, *, positions,
                                      block_tables=block_tables,
                                      paged_kernel=paged_kernel)
     else:  # mamba
-        mix, new_cache = S.mamba_forward(p["mamba"], cfg, x, cache)
+        state = cache
+        if cache is not None and rec_rows is not None:
+            state = _gather_rec(cache, rec_rows)
+        mix, new_cache = S.mamba_forward(p["mamba"], cfg, x, state,
+                                         update_mask=update_mask)
+        if cache is not None and rec_rows is not None:
+            new_cache = _scatter_rec(cache, new_cache, rec_rows)
     if sandwich:
         mix = L.rms_norm(p["post1"], mix, cfg.norm_eps)
     h = h + mix
@@ -205,8 +251,32 @@ def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int):
             if kind not in ATTN_KINDS and kind not in MLA_KINDS:
                 raise ValueError(
                     f"{cfg.name}: layer kind {kind!r} has a recurrent "
-                    "cache; the paged backend supports attention/MLA only")
+                    "cache; the paged backend supports attention/MLA only "
+                    "— use init_hybrid_cache for mixed stacks")
     return init_cache(cfg, num_blocks, block_size)
+
+
+def init_hybrid_cache(cfg: ArchConfig, *, kv_batch: int, kv_len: int,
+                      rec_batch: int):
+    """SlotState cache for mixed stacks: each layer's leaves sized by its
+    backend.  Positional (attention / MLA) leaves get the KV geometry —
+    ``(kv_batch, kv_len)`` is ``(max_slots, max_len)`` for the contiguous
+    backend or ``(num_blocks, block_size)`` for the paged one.  Recurrent
+    leaves get ``rec_batch`` pooled state rows (row 0 is the sentinel row
+    masked decode slots address, so pass usable_rows + 1)."""
+    caches = []
+    for unit, reps in cfg.segments():
+        unit_cache = {}
+        for j, kind in enumerate(unit):
+            if kind in REC_KINDS:
+                unit_cache[f"l{j}"] = _block_cache(cfg, kind, rec_batch, 0)
+            else:
+                unit_cache[f"l{j}"] = _block_cache(cfg, kind, kv_batch,
+                                                   kv_len)
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape).copy(),
+            unit_cache))
+    return caches
 
 
 # ---------------------------------------------------------------------------
@@ -280,7 +350,7 @@ def _embed(params, cfg: ArchConfig, tokens, frontend_embeds=None,
 
 def _run_segments(params, cfg: ArchConfig, h, *, positions, caches=None,
                   offset=None, prefix_len=None, block_tables=None,
-                  paged_kernel="ref"):
+                  paged_kernel="ref", rec_rows=None, update_mask=None):
     """Scan each segment's stacked unit over its repeats."""
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -297,7 +367,8 @@ def _run_segments(params, cfg: ArchConfig, h, *, positions, caches=None,
                 h, nc, aux = apply_block(
                     p_unit[f"l{j}"], cfg, kind, h, positions=positions,
                     cache=c, offset=offset, prefix_len=prefix_len,
-                    block_tables=block_tables, paged_kernel=paged_kernel)
+                    block_tables=block_tables, paged_kernel=paged_kernel,
+                    rec_rows=rec_rows, update_mask=update_mask)
                 new_c[f"l{j}"] = nc
                 aux_sum = aux_sum + aux
             return ACT.hidden(h), (new_c, aux_sum)
@@ -443,30 +514,42 @@ def prefill(params, cfg: ArchConfig, tokens, cache, frontend_embeds=None):
 
 
 def decode_step(params, cfg: ArchConfig, token, cache, offset,
-                block_tables=None, paged_kernel="ref"):
+                block_tables=None, paged_kernel="ref", rec_rows=None,
+                active=None):
     """token: [B,1] ints; offset: tokens-already-cached — a scalar shared by
     the batch, or a per-row [B] vector (serve slots at independent lengths
     inside one batched decode step).  ``block_tables`` [B, n] switches the
     cache to the paged layout (pooled leaves, see ``init_paged_cache``);
     ``paged_kernel="pallas"`` routes paged attention through the fused
-    block-table decode kernel instead of gather-then-attend."""
+    block-table decode kernel instead of gather-then-attend.
+
+    Recurrent layers (SlotState "recurrent" backend): ``rec_rows`` [B]
+    addresses each batch row's pooled state row, ``active`` [B] bool gates
+    the state advance — inactive rows map to the sentinel row 0 and keep
+    it unchanged, so masked decode rows never touch live state."""
     B = token.shape[0]
     off = jnp.asarray(offset)
     if off.ndim == 1:
         positions = off[:, None].astype(jnp.int32)
     else:
         positions = jnp.broadcast_to(off[None, None], (B, 1)).astype(jnp.int32)
+    update_mask = None
+    if active is not None:
+        update_mask = jnp.asarray(active).reshape(B, 1).astype(bool)
     h = _embed(params, cfg, token, positions=positions)
     h, new_caches, _ = _run_segments(params, cfg, h, positions=positions,
                                      caches=cache, offset=offset,
                                      block_tables=block_tables,
-                                     paged_kernel=paged_kernel)
+                                     paged_kernel=paged_kernel,
+                                     rec_rows=rec_rows,
+                                     update_mask=update_mask)
     h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
     return _head(params, cfg, h), new_caches
 
 
 def prefill_chunk(params, cfg: ArchConfig, tokens, cache, offset,
-                  with_logits: bool = True, block_tables=None):
+                  with_logits: bool = True, block_tables=None,
+                  rec_rows=None, valid=None):
     """Write a prompt chunk at cache positions [offset, offset+T).
 
     The serve engine's chunked-admission primitive: a fixed-shape [B,T]
@@ -477,8 +560,13 @@ def prefill_chunk(params, cfg: ArchConfig, tokens, cache, offset,
     feed the cache: pass ``with_logits=False`` (a Python-level switch —
     compile one variant per value) to skip the full-vocab head projection,
     the dominant FLOPs at production vocab sizes; logits come back None.
-    Positional caches (attention / MLA) only: recurrent caches would
-    advance on padding.
+
+    Positional caches tolerate padding anywhere (garbage positions stay
+    causally hidden until overwritten); recurrent caches would advance on
+    it, so recurrent-bearing archs pass ``valid`` — the count of real
+    tokens from the chunk start — and ``rec_rows`` [B] addressing the
+    pooled state rows: state advances over exactly the first ``valid``
+    positions and freezes on the padded tail.
     """
     B, T = tokens.shape
     if T >= L.QUERY_CHUNK_THRESHOLD:
@@ -492,10 +580,17 @@ def prefill_chunk(params, cfg: ArchConfig, tokens, cache, offset,
     off = jnp.asarray(offset, jnp.int32)
     positions = (off + jnp.arange(T, dtype=jnp.int32))[None, :]
     positions = jnp.broadcast_to(positions, (B, T))
+    update_mask = None
+    if valid is not None:
+        v = jnp.asarray(valid, jnp.int32)
+        update_mask = jnp.broadcast_to(
+            (jnp.arange(T, dtype=jnp.int32) < v)[None, :], (B, T))
     h = _embed(params, cfg, tokens, positions=positions)
     h, new_caches, _ = _run_segments(params, cfg, h, positions=positions,
                                      caches=cache, offset=off,
-                                     block_tables=block_tables)
+                                     block_tables=block_tables,
+                                     rec_rows=rec_rows,
+                                     update_mask=update_mask)
     if not with_logits:
         return None, new_caches
     h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
@@ -529,6 +624,72 @@ def reset_slot(cache, slot):
     """Zero one slot's rows in every cache leaf, other slots untouched."""
     return jax.tree.map(lambda x: x.at[:, slot].set(jnp.zeros((), x.dtype)),
                         cache)
+
+
+# Kind-aware variants (the SlotState protocol): in a hybrid cache, axis 1
+# means "slot row" for contiguous-KV leaves, "physical block" for paged
+# leaves, and "pooled state row" for recurrent leaves — so slot surgery
+# must walk the config in parallel with the cache and touch only the
+# leaves whose backend it addresses.
+
+
+def _map_by_kind(cfg, cache, fn_for_kind):
+    """Apply ``fn_for_kind(kind) -> leaf_fn | None`` over each layer's
+    subtree (None = leave the layer's leaves untouched)."""
+    out = []
+    for si, (unit, _reps) in enumerate(cfg.segments()):
+        seg = {}
+        for j, kind in enumerate(unit):
+            fn = fn_for_kind(kind)
+            leaves = cache[si][f"l{j}"]
+            seg[f"l{j}"] = leaves if fn is None else jax.tree.map(fn, leaves)
+        out.append(seg)
+    return out
+
+
+def take_state(cfg, cache, slot):
+    """Slice one contiguous-KV slot's rows as a batch-1 view; recurrent
+    leaves pass through WHOLE (they are addressed by ``rec_rows`` inside
+    the forward, not by the batch dim)."""
+    return _map_by_kind(
+        cfg, cache,
+        lambda kind: None if kind in REC_KINDS else
+        (lambda x: lax.dynamic_slice_in_dim(x, slot, 1, axis=1)))
+
+
+def write_state(cfg, cache, sub, slot):
+    """Write a ``take_state`` view back: contiguous-KV leaves land in the
+    slot's row; recurrent leaves come back whole (the forward already
+    scattered their rows in place)."""
+    out = []
+    for si, (unit, _reps) in enumerate(cfg.segments()):
+        seg = {}
+        for j, kind in enumerate(unit):
+            full, s = cache[si][f"l{j}"], sub[si][f"l{j}"]
+            if kind in REC_KINDS:
+                seg[f"l{j}"] = s
+            else:
+                seg[f"l{j}"] = jax.tree.map(
+                    lambda x, y: lax.dynamic_update_slice_in_dim(
+                        x, y.astype(x.dtype), slot, axis=1), full, s)
+        out.append(seg)
+    return out
+
+
+def reset_slot_state(cfg, cache, slot=None, rec_row=None):
+    """Zero a contiguous-KV slot row (``slot``) and/or a pooled recurrent
+    state row (``rec_row``); pass None to leave that backend untouched
+    (paged-KV leaves are always untouched — block freshness is the
+    allocator's job)."""
+    def fn(kind):
+        if kind in REC_KINDS:
+            if rec_row is None:
+                return None
+            return lambda x: x.at[:, rec_row].set(jnp.zeros((), x.dtype))
+        if slot is None:
+            return None
+        return lambda x: x.at[:, slot].set(jnp.zeros((), x.dtype))
+    return _map_by_kind(cfg, cache, fn)
 
 
 def copy_block(cache, src, dst):

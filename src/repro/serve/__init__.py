@@ -1,19 +1,27 @@
 """Continuous-batching serve subsystem.
 
-A fixed pool of decode slots over one shared KV cache; queued requests are
+A fixed pool of decode slots over one shared cache; queued requests are
 admitted into slots the moment capacity frees, with chunked prefill
-interleaved between decode steps.  Two KV backends sit behind the same
-engine interface: contiguous per-slot rows (slot-count admission) and
-paged blocks (block-count admission, prefix sharing, preemption).
+interleaved between decode steps.  Per-layer decode state goes through the
+SlotState protocol — three backends behind one engine interface, composed
+per layer from the architecture config (hybrid stacks mix them):
 
-  engine.ServeEngine    the continuous-batching core (jit-stable decode)
-  engine.serve_waves    the wave-at-a-time baseline (for A/B benchmarks)
-  blocks.BlockAllocator paged-KV host allocator (free list, refcounts,
-                        prefix index, copy-on-write)
-  slots.SlotTable       host-side slot bookkeeping mirroring device state
-  queue.RequestQueue    arrival-time-gated admission queue + generators
-  metrics.ServeMetrics  per-request TTFT, per-step throughput, occupancy,
-                        prefix hit-rate and block-pool gauges
+  * contiguous KV rows   (slot-count admission)
+  * paged KV blocks      (block-count admission, prefix sharing, preemption)
+  * recurrent state rows (row-count admission; O(1), never grows)
+
+  engine.ServeEngine       the continuous-batching core (jit-stable decode)
+  engine.serve_waves       wave-at-a-time baseline — the token-identity
+                           TEST ORACLE (and the A/B benchmark baseline)
+  slot_state.StatePlan     per-layer backend resolution from an ArchConfig
+  slot_state.RecurrentRows pooled recurrent-row allocator (row 0 sentinel)
+  blocks.BlockAllocator    paged-KV host allocator (free list, refcounts,
+                           prefix index, copy-on-write)
+  slots.SlotTable          host-side slot bookkeeping mirroring device state
+  queue.RequestQueue       arrival-time-gated admission heap + generators
+  metrics.ServeMetrics     per-request TTFT, per-step throughput, occupancy,
+                           preemption waste, block-pool gauges — on a wall
+                           OR virtual step clock (deterministic timing)
 """
 
 from .blocks import BlockAllocator, NoFreeBlocks, SENTINEL  # noqa: F401
@@ -21,4 +29,6 @@ from .engine import EngineConfig, ServeEngine, serve_waves  # noqa: F401
 from .metrics import ServeMetrics  # noqa: F401
 from .queue import (Request, RequestQueue, poisson_arrivals,  # noqa: F401
                     parse_arrival_spec, trace_arrivals)
+from .slot_state import (NoFreeRows, REC_SENTINEL,  # noqa: F401
+                         RecurrentRows, StatePlan)
 from .slots import SlotTable  # noqa: F401

@@ -1,43 +1,48 @@
-"""Continuous-batching serve engine with slot-level admission and a
-pluggable KV backend (contiguous rows or paged blocks).
+"""Continuous-batching serve engine over the SlotState protocol: per-layer
+decode-state backends (contiguous KV, paged KV, recurrent rows) composed
+from the architecture config.
 
 The wave-based loop this replaces admitted B requests, decoded until the
 whole wave drained, and only then admitted again — freed slots idled behind
 the wave's straggler.  Here a fixed pool of ``max_slots`` decode slots runs
-over one shared KV cache and a queued request is admitted the moment EOS or
+over one shared cache and a queued request is admitted the moment EOS or
 the per-request budget frees a slot:
 
   * **jit-stable decode**: every decode step is one compiled call over the
     full [S] slot batch — fixed slot count, per-slot cache offsets (the
     vector-``offset`` form of ``transformer.decode_step``), inactive rows
-    masked by writing to the cache sentinel position the causal mask hides.
+    masked by writing to the cache sentinel position the causal mask hides
+    (KV) and by gating the state advance on the sentinel row (recurrent).
     Slot churn never recompiles anything.
   * **chunked admission prefill**: prompts stream through one compiled
     [1, prefill_chunk] function (``transformer.prefill_chunk``) into the
-    admitted slot's cache, interleaved between decode steps so ongoing
+    admitted slot's state, interleaved between decode steps so ongoing
     decodes keep making progress while newcomers prefill.
   * **single RNG split discipline**: token t of request r is sampled with
     ``fold_in(fold_in(seed_key, r), t)`` — including the FIRST token (the
     wave-era loop sampled it from the unsplit top-level key).  Sampling is
     deterministic per request, independent of slot assignment, admission
-    order, pool size, KV backend, or preemption.
+    order, pool size, state backend, or preemption.
   * **mesh composition**: given a 1-axis ("data",) mesh the slot batch dim
     of every per-step input shards across devices; params are replicated
     (serve-style), activations follow ``act_sharding``.
 
-Two KV backends hide behind one cache interface (``EngineConfig.kv_mode``):
+Per-layer state backends (``serve.slot_state.StatePlan``): attention / MLA
+layers follow the engine's KV mode, recurrent layers (mamba / xLSTM)
+always take the recurrent-row backend — hybrid stacks (Jamba) mix both
+inside one engine run:
 
-  * ``contiguous`` — one ``max_len`` cache row per slot (the slot index IS
-    the cache batch row); admission is free-slot driven.  Simple, but HBM
-    caps concurrency at ``pool_positions / max_len`` even when requests
-    use a fraction of their reservation.
-  * ``paged`` — one pooled tensor of ``kv_blocks`` × ``block_size``
+  * ``contiguous`` KV — one ``max_len`` cache row per slot (the slot index
+    IS the cache batch row); admission is free-slot driven.  Simple, but
+    HBM caps concurrency at ``pool_positions / max_len`` even when
+    requests use a fraction of their reservation.
+  * ``paged`` KV — one pooled tensor of ``kv_blocks`` × ``block_size``
     positions per cache leaf; each slot maps virtual positions onto
     physical blocks through a block table (``blocks.BlockAllocator`` owns
     the host bookkeeping).  Admission is free-BLOCK driven, identical
     prompt prefixes share refcounted blocks (copy-on-write when a shared
     block must be rewritten), and when the pool runs dry mid-decode the
-    YOUNGEST request is preempted: its blocks are freed and the request
+    YOUNGEST request is preempted: its resources are freed and the request
     requeued — the fold-in RNG regenerates its tokens exactly on re-serve,
     so preemption is invisible in outputs.
 
@@ -48,14 +53,26 @@ Two KV backends hide behind one cache interface (``EngineConfig.kv_mode``):
     hence the cached k/v content — match a from-scratch prefill (the
     paged suite and serve benchmarks assert exact token identity end to
     end).
+  * ``recurrent`` rows — O(1) per-request state in a pooled
+    ``[rec_slots + 1, ...]`` leaf (row 0 = sentinel).  Admission takes one
+    row (a SECOND resource next to KV blocks: both must be free before
+    either commits); the row never grows, so recurrent state can defer
+    admission but never triggers mid-decode preemption.  Prefill chunks
+    stay on the aligned ``[k·C, (k+1)·C)`` grid with the padded tail gated
+    off by a validity mask — the state advances over every prompt token
+    exactly once, which is what makes continuous-path outputs
+    token-identical to the wave loop.  Prefix-cache sharing is disabled
+    for recurrent-bearing archs: a prefix hit would skip the state
+    computation the recurrence needs.
 
-``serve_waves`` keeps the old wave-at-a-time loop alive as the measured
-baseline for ``benchmarks/serve_bench.py``.
+``serve_waves`` keeps the old wave-at-a-time loop alive as the TEST ORACLE
+(plus the measured baseline for ``benchmarks/serve_bench.py``): it batch-
+prefills whole prompts with no chunking, no masking and no slot reuse, so
+any engine output can be checked against it token for token.
 """
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
@@ -65,11 +82,11 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
-from repro.models.transformer import ATTN_KINDS, MLA_KINDS
 
 from .blocks import BlockAllocator, NoFreeBlocks
 from .metrics import ServeMetrics
 from .queue import Request, RequestQueue
+from .slot_state import RecurrentRows, StatePlan
 from .slots import ACTIVE, PREFILL, SlotTable
 
 
@@ -85,6 +102,13 @@ class EngineConfig:
     eos_id: Optional[int] = None
     seed: int = 0
     kv_mode: str = "contiguous"  # "contiguous" | "paged"
+    slot_state: str = "auto"     # "auto" (follow kv_mode) | "contiguous" |
+                                 # "paged" — KV-layer backend override;
+                                 # recurrent layers always take the
+                                 # recurrent-row backend
+    rec_slots: int = 0           # recurrent rows (0 = match max_slots);
+                                 # < max_slots makes rows the scarce
+                                 # admission resource
     block_size: int = 16         # paged: positions per physical block
     kv_blocks: int = 0           # paged: pool size (0 = match contiguous
                                  # capacity: 1 + max_slots * max_len / bs)
@@ -92,30 +116,22 @@ class EngineConfig:
                                  # "pallas" (fused block-table kernel) |
                                  # "ref" (gather-then-attend oracle) |
                                  # "auto" (pallas on TPU, ref elsewhere)
+    clock: str = "step"          # "step" (virtual, deterministic — the
+                                 # loops never sleep) | "wall" (measured
+                                 # seconds; idle gaps really sleep)
+    step_s: float = 0.01         # virtual seconds per engine step
 
 
-def _check_arch(cfg: ArchConfig, *, allow_recurrent: bool = False) -> None:
-    """Slot reuse needs positional caches: a freed row is reclaimed by
-    masking, not by replaying state.  Recurrent caches (mamba/xlstm) would
-    advance on chunk padding and carry the evicted request's state — the
-    CONTINUOUS engine rejects them loudly rather than serving wrongly; the
-    wave baseline batch-prefills without chunk padding and may keep them
-    (``allow_recurrent=True``).  The frontend (prefix-image) path needs
-    per-request embeddings at admission: rejected in both modes (requests
-    are token-only)."""
+def _check_arch(cfg: ArchConfig) -> None:
+    """Every token-only architecture serves: attention/MLA layers through a
+    KV backend, recurrent layers (mamba/xlstm) through pooled state rows,
+    hybrids through both at once (``slot_state.StatePlan``).  Only the
+    frontend (prefix-image) path is rejected — it needs per-request
+    embeddings at admission and requests are token-only."""
     if cfg.frontend:
         raise ValueError(
             f"{cfg.name}: frontend architectures are not servable "
             "(requests are token-only)")
-    if allow_recurrent:
-        return
-    for unit, _reps in cfg.segments():
-        for kind in unit:
-            if kind not in ATTN_KINDS and kind not in MLA_KINDS:
-                raise ValueError(
-                    f"{cfg.name}: layer kind {kind!r} has a recurrent "
-                    "cache; the continuous engine supports attention/MLA "
-                    "architectures (--mode wave still serves it)")
 
 
 def _make_sampler(base_key, temperature: float):
@@ -141,7 +157,7 @@ def _make_sampler(base_key, temperature: float):
 
 
 class ServeEngine:
-    """Fixed slot pool + shared KV cache (contiguous or paged) + queue."""
+    """Fixed slot pool + per-layer SlotState backends + arrival queue."""
 
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig,
                  mesh=None):
@@ -155,9 +171,22 @@ class ServeEngine:
             raise ValueError("prefill_chunk must be >= 1")
         if ecfg.kv_mode not in ("contiguous", "paged"):
             raise ValueError(f"unknown kv_mode {ecfg.kv_mode!r}")
+        if ecfg.slot_state not in ("auto", "contiguous", "paged"):
+            raise ValueError(f"unknown slot_state {ecfg.slot_state!r}")
         if ecfg.paged_kernel not in ("auto", "pallas", "ref"):
             raise ValueError(f"unknown paged_kernel {ecfg.paged_kernel!r}")
-        self.paged = ecfg.kv_mode == "paged"
+        if ecfg.clock not in ("step", "wall"):
+            raise ValueError(f"unknown clock {ecfg.clock!r}")
+        if ecfg.rec_slots < 0:
+            raise ValueError("rec_slots must be >= 0")
+        kv_mode = (ecfg.kv_mode if ecfg.slot_state == "auto"
+                   else ecfg.slot_state)
+        self.plan = StatePlan.resolve(cfg, kv_mode)
+        self.has_rec = self.plan.has_recurrent
+        self.has_kv = self.plan.has_kv
+        # "paged" only means something when there are positional leaves to
+        # page: a pure-recurrent arch ignores the KV mode entirely
+        self.paged = self.has_kv and kv_mode == "paged"
         # "auto" takes the fused kernel only where it runs natively: on TPU
         # with live Pallas dispatch.  Elsewhere it stays on the gather
         # oracle (interpret-mode kernels would crawl); explicit "pallas"
@@ -191,8 +220,15 @@ class ServeEngine:
             self.allocator = None
             self.table = SlotTable(ecfg.max_slots, ecfg.max_len)
 
+        # the second admission resource: one pooled state row per live
+        # request on recurrent-bearing archs
+        self.rec: Optional[RecurrentRows] = None
+        if self.has_rec:
+            self.rec = RecurrentRows(ecfg.rec_slots or ecfg.max_slots)
+
         self.queue = RequestQueue()
-        self.metrics = ServeMetrics(max_slots=ecfg.max_slots)
+        self.metrics = ServeMetrics(max_slots=ecfg.max_slots,
+                                    clock=ecfg.clock, step_s=ecfg.step_s)
         self.results: Dict[int, List[int]] = {}
         self._key = jax.random.key(ecfg.seed)
 
@@ -210,7 +246,25 @@ class ServeEngine:
                 lambda _: replicated, params))
         self.params = params
 
-        if self.paged:
+        if self.has_rec:
+            # hybrid/recurrent cache: KV leaves sized by the KV backend's
+            # geometry, recurrent leaves by the row pool (+ sentinel row 0)
+            if self.paged:
+                kv_batch, kv_len = self.allocator.num_blocks, ecfg.block_size
+            else:
+                kv_batch, kv_len = ecfg.max_slots, ecfg.max_len
+            cache = T.init_hybrid_cache(cfg, kv_batch=kv_batch,
+                                        kv_len=kv_len,
+                                        rec_batch=self.rec.capacity + 1)
+            if mesh is not None:
+                # pooled recurrent rows (and paged pools) have no slot dim:
+                # replicate the whole cache and let the data-sharded
+                # per-step inputs drive the layout
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                replicated = NamedSharding(mesh, P())
+                cache = jax.tree.map(
+                    lambda x: jax.device_put(x, replicated), cache)
+        elif self.paged:
             cache = T.init_paged_cache(cfg, self.allocator.num_blocks,
                                        ecfg.block_size)
             if mesh is not None:
@@ -231,41 +285,38 @@ class ServeEngine:
                     cache)
         self.cache = cache
 
-        if self.paged:
-            pk = self.paged_kernel
-            self._decode = jax.jit(
-                lambda p, tok, c, off, bt: T.decode_step(
-                    p, cfg, tok, c, off, block_tables=bt, paged_kernel=pk))
+        # One jitted decode / admit pair serves every backend mix: unused
+        # backend inputs are passed as None (an empty pytree — traced away)
+        pk = self.paged_kernel
+        contig_kv = self.has_kv and not self.paged
+        self._decode = jax.jit(
+            lambda p, tok, c, off, bt, rows, act: T.decode_step(
+                p, cfg, tok, c, off, block_tables=bt, paged_kernel=pk,
+                rec_rows=rows, active=act))
 
-            # admission prefill addresses the pool through the slot's own
-            # [1, n_max] table row — no slot slicing needed
-            def admit_paged(with_logits):
-                def fn(p, c, tokens, offset, table):
-                    return T.prefill_chunk(p, cfg, tokens, c, offset,
-                                           with_logits=with_logits,
-                                           block_tables=table)
-                return jax.jit(fn)
-            self._admit = admit_paged(True)
-            self._admit_quiet = admit_paged(False)
+        # admission: contiguous KV slices the slot's row, prefills one
+        # chunk into it, writes it back (paged mode addresses the pool
+        # through the slot's [1, n_max] table row instead; recurrent state
+        # is row-addressed in place via ``rec_row``).  Interior chunks only
+        # feed the cache, so they skip the full-vocab head projection (the
+        # dominant admission FLOPs at real vocab sizes)
+        def admit(with_logits):
+            def fn(p, c, tokens, slot, offset, table, rec_row, valid):
+                sub = T.take_state(cfg, c, slot) if contig_kv else c
+                logits, sub = T.prefill_chunk(
+                    p, cfg, tokens, sub, offset, with_logits=with_logits,
+                    block_tables=table, rec_rows=rec_row, valid=valid)
+                if contig_kv:
+                    return logits, T.write_state(cfg, c, sub, slot)
+                return logits, sub
+            return jax.jit(fn)
+        self._admit = admit(True)
+        self._admit_quiet = admit(False)
+        self._reset = jax.jit(
+            lambda c, slot, row: T.reset_slot_state(cfg, c, slot=slot,
+                                                    rec_row=row))
+        if self.paged:
             self._copy = jax.jit(T.copy_block)
-        else:
-            self._decode = jax.jit(
-                lambda p, tok, c, off: T.decode_step(p, cfg, tok, c, off))
-            # admission: slice the slot's row, prefill one chunk into it,
-            # write it back — one compiled function per variant, traced slot
-            # index.  Interior chunks only feed the cache, so they skip the
-            # full-vocab head projection (the dominant admission FLOPs at
-            # real vocab sizes)
-            def admit(with_logits):
-                def fn(p, c, tokens, slot, offset):
-                    sub = T.take_slot(c, slot)
-                    logits, sub = T.prefill_chunk(
-                        p, cfg, tokens, sub, offset, with_logits=with_logits)
-                    return logits, T.write_slot(c, sub, slot)
-                return jax.jit(fn)
-            self._admit = admit(True)
-            self._admit_quiet = admit(False)
-            self._reset = jax.jit(T.reset_slot)
         self._sample = jax.jit(_make_sampler(self._key, ecfg.temperature))
 
     def _put(self, x):
@@ -300,22 +351,32 @@ class ServeEngine:
             self.metrics.on_submit(r.req_id, r.arrival_s, len(r.prompt))
         self.queue.submit(requests)
 
-    # -- paged-backend plumbing -------------------------------------------
+    # -- backend resource plumbing ----------------------------------------
     def _record_blocks(self) -> None:
         self.metrics.on_blocks(self.allocator.num_used,
                                self.allocator.capacity)
 
+    def _free_resources(self, slot) -> None:
+        """Hand every backend resource the slot holds back to its pool."""
+        if self.allocator is not None and slot.blocks:
+            self.allocator.free_blocks(slot.blocks)
+            slot.blocks = []
+            self._record_blocks()
+        if self.rec is not None and slot.rec_row:
+            self.rec.free(slot.rec_row)
+            slot.rec_row = 0
+
     def _preempt(self, victim) -> None:
-        """Free the victim's blocks and send its request back to the queue.
-        The fold-in RNG regenerates its tokens exactly on re-serve, so the
-        only trace is the ``preemptions`` counter (and the wasted steps)."""
+        """Free the victim's resources (blocks AND recurrent row) and send
+        its request back to the queue.  The fold-in RNG regenerates its
+        tokens exactly on re-serve, so the only trace is the
+        ``preemptions`` counter (and the wasted decode tokens, which
+        ``metrics.wasted_decode_tokens`` books)."""
         req = victim.request
-        self.allocator.free_blocks(victim.blocks)
-        victim.blocks = []
+        self._free_resources(victim)
         self.table.release(victim)
         self.metrics.on_preempt(req.req_id)
         self.queue.submit(req)
-        self._record_blocks()
 
     def _make_room(self, slot) -> bool:
         """The pool is dry: preempt the youngest busy request.  Returns
@@ -376,11 +437,15 @@ class ServeEngine:
         """Map the request's prompt onto blocks: prefix-cache hits share
         published blocks (refcounted), the tail gets fresh ones.  Fails
         (False) when the free list cannot cover the tail — the caller
-        requeues the request and stops admitting this step."""
+        requeues the request and stops admitting this step.
+
+        Recurrent-bearing archs skip prefix matching entirely: a prefix
+        hit would skip the prompt positions the recurrent state must
+        advance over, serving from a stale (zero) recurrence."""
         alloc = self.allocator
         bs = alloc.block_size
         plen = len(req.prompt)
-        matched = alloc.match_prefix(req.prompt)        # increfs
+        matched = [] if self.has_rec else alloc.match_prefix(req.prompt)
         fresh_needed = alloc.blocks_for(plen) - len(matched)
         if fresh_needed > alloc.num_free:
             alloc.free_blocks(matched)
@@ -395,7 +460,8 @@ class ServeEngine:
         slot.blocks = matched + [alloc.alloc() for _ in range(fresh_needed)]
         slot.prefill_pos = pos0
         self.metrics.on_admit(req.req_id)
-        self.metrics.on_prefix_lookup(pos0, plen)
+        if not self.has_rec:
+            self.metrics.on_prefix_lookup(pos0, plen)
         self._record_blocks()
         return True
 
@@ -404,6 +470,15 @@ class ServeEngine:
         for slot in self.table.free():
             req = self.queue.pop_ready(now_s)
             if req is None:
+                return
+            # TWO-RESOURCE admission: every backend must have capacity
+            # before either commits (nothing to unwind on failure).
+            # Recurrent rows never free mid-decode, so a deferral clears
+            # only when a request finishes (or is preempted); FIFO order
+            # is preserved by requeueing and admitting nobody behind the
+            # blocked request.
+            if self.rec is not None and self.rec.num_free == 0:
+                self.queue.submit(req)
                 return
             if self.paged:
                 if not self._try_admit_paged(slot, req):
@@ -414,16 +489,22 @@ class ServeEngine:
                     return
             else:
                 self.table.assign(slot, req)
-                self.cache = self._reset(self.cache, slot.index)
                 self.metrics.on_admit(req.req_id)
+            if self.rec is not None:
+                slot.rec_row = self.rec.alloc()
+            # device-side hygiene: a reused contiguous slot row and/or
+            # recurrent row starts zeroed (paged blocks need no reset —
+            # fresh blocks are written before they are ever read)
+            if self.rec is not None or not self.paged:
+                slot_idx = (slot.index if self.has_kv and not self.paged
+                            else None)
+                row = slot.rec_row if self.rec is not None else None
+                self.cache = self._reset(self.cache, slot_idx, row)
 
     def _finish(self, slot) -> None:
         req = slot.request
         self.results[req.req_id] = list(slot.output)
-        if self.paged:
-            self.allocator.free_blocks(slot.blocks)
-            slot.blocks = []
-            self._record_blocks()
+        self._free_resources(slot)
         self.table.release(slot)
         self.metrics.on_finish(req.req_id)
 
@@ -438,12 +519,18 @@ class ServeEngine:
     def _prefill_tick(self) -> None:
         """Advance up to ``chunks_per_step`` admission prefills one chunk.
 
-        Chunk geometry keeps every write in-bounds without padding leaking
-        past the prompt: short prompts (≤ chunk) pad at the END (garbage
-        positions are causally masked until overwritten by decode); a
-        ragged TAIL chunk is RIGHT-ALIGNED at ``plen - chunk``, re-writing
-        the overlap with bit-identical k/v (k/v at a position depend only
-        on its token, its position, and the already-written prefix).
+        Chunk geometry, KV-only archs: short prompts (≤ chunk) pad at the
+        END (garbage positions are causally masked until overwritten by
+        decode); a ragged TAIL chunk is RIGHT-ALIGNED at ``plen - chunk``,
+        re-writing the overlap with bit-identical k/v (k/v at a position
+        depend only on its token, its position, and the already-written
+        prefix).
+
+        Recurrent-bearing archs instead keep every chunk on the ALIGNED
+        ``[k·C, (k+1)·C)`` grid with the final chunk end-padded and gated
+        off by ``valid``: re-running an overlap would advance the
+        recurrence twice over those tokens.  KV layers in the same stack
+        tolerate the end padding exactly like the short-prompt case.
 
         Paged mode starts at the prefix-cache hit point (chunk-grid
         aligned, so the geometry — and the written bits — match the
@@ -461,7 +548,14 @@ class ServeEngine:
             plen = len(prompt)
             remaining = plen - slot.prefill_pos
             chunk = np.zeros((1, C), np.int32)
-            if plen <= C:                       # whole prompt, end-padded
+            valid = None
+            if self.has_rec:                    # aligned grid, masked tail
+                start = slot.prefill_pos
+                n = min(C, remaining)
+                last_row = n - 1
+                chunk[0, :n] = prompt[start:start + n]
+                valid = n
+            elif plen <= C:                     # whole prompt, end-padded
                 start, last_row = 0, plen - 1
                 chunk[0, :plen] = prompt
             elif remaining > C:                 # full interior chunk
@@ -475,15 +569,16 @@ class ServeEngine:
             if self.paged:
                 if not self._ensure_writable_range(slot, start, start + C):
                     continue                    # preempted mid-COW
-                logits, self.cache = admit(
-                    self.params, self.cache, jnp.asarray(chunk),
-                    jnp.asarray(start, jnp.int32),
-                    jnp.asarray(self.table.block_table_row(slot)))
+                table = jnp.asarray(self.table.block_table_row(slot))
             else:
-                logits, self.cache = admit(
-                    self.params, self.cache, jnp.asarray(chunk),
-                    slot.index, start)
-            slot.prefill_pos += remaining if remaining <= C else C
+                table = None
+            rec_row = (None if self.rec is None
+                       else jnp.asarray([slot.rec_row], jnp.int32))
+            logits, self.cache = admit(
+                self.params, self.cache, jnp.asarray(chunk), slot.index,
+                jnp.asarray(start, jnp.int32), table, rec_row,
+                None if valid is None else jnp.asarray(valid, jnp.int32))
+            slot.prefill_pos += min(remaining, C)
             slot.length = slot.prefill_pos
             self.metrics.on_prefill_chunk(min(remaining, C))
             budget -= 1
@@ -495,9 +590,10 @@ class ServeEngine:
                     row, jnp.asarray([slot.req_id], jnp.int32),
                     jnp.asarray([0], jnp.int32))[0])
                 self.table.activate(slot, tok)
-                if self.paged:
+                if self.paged and not self.has_rec:
                     # publish the full prompt blocks so identical prompts
-                    # admitted later share them (first writer wins)
+                    # admitted later share them (first writer wins);
+                    # recurrent archs never share — see _try_admit_paged
                     keys = self.allocator.prefix_keys(slot.request.prompt)
                     for i, key in enumerate(keys):
                         self.allocator.publish(slot.blocks[i], key)
@@ -509,7 +605,8 @@ class ServeEngine:
         ``length`` this step — allocate the covering block when the write
         crosses into a new one, preempting the youngest request while the
         pool is dry (oldest slots grow first, so preemption pressure lands
-        on the newest work)."""
+        on the newest work).  Recurrent rows never grow: blocks are the
+        only resource that can run out mid-decode."""
         bs = self.allocator.block_size
         for slot in sorted(self.table.active(), key=lambda s: s.admit_seq):
             if slot.state != ACTIVE:    # preempted by an earlier growth
@@ -528,15 +625,15 @@ class ServeEngine:
         if self.table.n_active == 0:
             return
         tokens, offsets, active, req_ids, tok_idx = self.table.decode_inputs()
+        bt = rows = act = None
         if self.paged:
-            logits, self.cache = self._decode(
-                self.params, self._put(jnp.asarray(tokens)), self.cache,
-                self._put(jnp.asarray(offsets)),
-                self._put(jnp.asarray(self.table.block_tables())))
-        else:
-            logits, self.cache = self._decode(
-                self.params, self._put(jnp.asarray(tokens)), self.cache,
-                self._put(jnp.asarray(offsets)))
+            bt = self._put(jnp.asarray(self.table.block_tables()))
+        if self.rec is not None:
+            rows = self._put(jnp.asarray(self.table.rec_rows()))
+            act = self._put(jnp.asarray(active))
+        logits, self.cache = self._decode(
+            self.params, self._put(jnp.asarray(tokens)), self.cache,
+            self._put(jnp.asarray(offsets)), bt, rows, act)
         toks = np.asarray(self._sample(
             logits[:, 0], self._put(jnp.asarray(req_ids)),
             self._put(jnp.asarray(tok_idx))))
@@ -551,10 +648,12 @@ class ServeEngine:
             self._complete_if_done(slot, tok)
 
     def step(self) -> None:
-        """One engine iteration: admissions, a prefill tick, a decode step."""
+        """One engine iteration: admissions, a prefill tick, a decode step,
+        and a clock tick (virtual mode — wall time passes on its own)."""
         self._admit_ready(self.metrics.now())
         self._prefill_tick()
         self._decode_tick()
+        self.metrics.tick()
 
     def run(self, requests: Optional[Sequence[Request]] = None
             ) -> Dict[int, List[int]]:
@@ -565,16 +664,18 @@ class ServeEngine:
         while len(self.queue) or self.table.busy():
             if not self.table.busy():
                 nxt = self.queue.next_arrival()
-                now = self.metrics.now()
-                if nxt is not None and nxt > now:
-                    time.sleep(min(nxt - now, 0.01))   # open-loop idle
+                if nxt is not None:
+                    # open-loop idle: the virtual clock jumps to the next
+                    # arrival, the wall clock actually sleeps the gap
+                    self.metrics.wait_until(nxt)
             self.step()
         self.metrics.stop()
         return self.results
 
 
 # ---------------------------------------------------------------------------
-# wave-at-a-time baseline (what PR 2 shipped) — kept for A/B benchmarks
+# wave-at-a-time baseline (what PR 2 shipped) — the token-identity TEST
+# ORACLE, and the measured baseline for benchmarks/serve_bench.py
 # ---------------------------------------------------------------------------
 
 
@@ -582,16 +683,19 @@ def serve_waves(cfg: ArchConfig, params, ecfg: EngineConfig,
                 requests: Sequence[Request]):
     """Admit ≤ max_slots requests per wave; decode until the wave drains.
 
-    Freed slots idle until the whole wave finishes — the occupancy/
-    throughput gap to ``ServeEngine`` on ragged output lengths is exactly
-    what ``benchmarks/serve_bench.py`` measures.  Prompts within a wave
-    must share one length (the wave loop batch-prefills).  Sampling uses
-    the same fold-in discipline, so per-request outputs match the
-    continuous engine token for token.
+    This is the engine's TEST ORACLE: it batch-prefills whole prompts in
+    one call (no chunking, no padding masks, no slot reuse, no paging), so
+    its per-request outputs are the ground truth the continuous engine —
+    every backend mix, including recurrent and hybrid stacks — must match
+    token for token (same fold-in sampling discipline).  It doubles as the
+    measured baseline whose occupancy/throughput gap on ragged output
+    lengths ``benchmarks/serve_bench.py`` quantifies: freed slots idle
+    until the whole wave finishes.  Prompts within a wave must share one
+    length (the wave loop batch-prefills).
     """
-    _check_arch(cfg, allow_recurrent=True)
+    _check_arch(cfg)
     S, max_len = ecfg.max_slots, ecfg.max_len
-    metrics = ServeMetrics(max_slots=S)
+    metrics = ServeMetrics(max_slots=S, clock=ecfg.clock, step_s=ecfg.step_s)
     results: Dict[int, List[int]] = {}
 
     prefill = jax.jit(lambda p, t, c: T.prefill(p, cfg, t, c, None))
@@ -613,9 +717,7 @@ def serve_waves(cfg: ArchConfig, params, ecfg: EngineConfig,
         # a wave starts only once its LAST member arrived — slots freed
         # mid-wave cannot admit (that is the baseline's pathology)
         wave_start = max(r.arrival_s for r in wave)
-        now = metrics.now()
-        if wave_start > now:
-            time.sleep(wave_start - now)
+        metrics.wait_until(wave_start)
         B = len(wave)
         cache = T.init_cache(cfg, B, max_len)
         prompts = jnp.asarray([list(r.prompt) for r in wave], jnp.int32)
@@ -624,6 +726,7 @@ def serve_waves(cfg: ArchConfig, params, ecfg: EngineConfig,
             metrics.on_admit(r.req_id)
         logits, cache, offset = prefill(params, prompts, cache)
         metrics.on_prefill_chunk(B * P)
+        metrics.tick()
         toks = np.asarray(sample_j(logits[:, -1], req_ids,
                                    jnp.zeros((B,), jnp.int32)))
         outs = [[int(t)] for t in toks]
@@ -643,6 +746,7 @@ def serve_waves(cfg: ArchConfig, params, ecfg: EngineConfig,
             toks = np.asarray(sample_j(
                 logits[:, 0], req_ids, jnp.full((B,), gen, jnp.int32)))
             metrics.on_decode_step(int((~done).sum()))
+            metrics.tick()
             for i, r in enumerate(wave):
                 if done[i]:
                     continue       # slot idles until the wave drains

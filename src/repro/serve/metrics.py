@@ -2,10 +2,14 @@
 
 Two clocks run side by side:
 
-  * the **step clock** — deterministic counters (decode steps, tokens out,
-    active-slot sums) that benchmarks and CI assert on;
-  * the **wall clock** — measured seconds for the human-facing tok/s and
-    TTFT numbers (noisy on shared CI machines, never asserted).
+  * the **step counters** — deterministic tallies (decode steps, tokens
+    out, active-slot sums) that benchmarks and CI assert on;
+  * the **serve clock** behind ``now()`` — either measured wall seconds
+    (``clock="wall"``: human-facing tok/s and TTFT, noisy on shared CI
+    machines, never asserted) or a VIRTUAL step clock (``clock="step"``,
+    the engine default): time advances ``step_s`` per engine step via
+    ``tick()`` and jumps forward via ``wait_until()`` instead of sleeping
+    — deterministic TTFTs, and serve loops never block on arrival gaps.
 
 ``occupancy`` is the serve engine's headline number: the fraction of
 slot-steps that decoded a live request.  The wave baseline burns slot-steps
@@ -54,7 +58,11 @@ class ServeMetrics:
     blocks_peak: int = 0             # high-water mark
     blocks_total: int = 0            # pool capacity (sentinel excluded)
     preemptions: int = 0             # preempt-and-requeue events
+    wasted_decode_tokens: int = 0    # decode tokens discarded by preemption
+    clock: str = "wall"              # "wall" (measured) | "step" (virtual)
+    step_s: float = 0.01             # virtual seconds per engine step
     _t0: Optional[float] = None
+    _vt: float = 0.0                 # virtual clock position (step mode)
     wall_s: float = 0.0
 
     # -- clock ------------------------------------------------------------
@@ -62,9 +70,27 @@ class ServeMetrics:
         self._t0 = time.monotonic()
 
     def now(self) -> float:
+        if self.clock == "step":
+            return self._vt
         if self._t0 is None:
             self.start()
         return time.monotonic() - self._t0
+
+    def tick(self) -> None:
+        """One engine step elapsed (virtual clock; wall mode is a no-op —
+        real time passed on its own)."""
+        if self.clock == "step":
+            self._vt += self.step_s
+
+    def wait_until(self, t: float) -> None:
+        """Idle until the serve clock reaches ``t``: the virtual clock
+        jumps (deterministic, instant), the wall clock sleeps."""
+        if self.clock == "step":
+            self._vt = max(self._vt, t)
+            return
+        now = self.now()
+        if t > now:
+            time.sleep(t - now)
 
     def stop(self) -> None:
         self.wall_s = self.now()
@@ -110,12 +136,19 @@ class ServeMetrics:
         self.blocks_total = total
 
     def on_preempt(self, req_id: int) -> None:
-        """A mid-flight request lost its blocks and went back to the queue:
-        its per-request record restarts (tokens regenerate exactly on
-        re-serve — the fold-in RNG makes the retry invisible in outputs),
-        only the ``preemptions`` counter remembers the wasted work."""
+        """A mid-flight request lost its resources and went back to the
+        queue: its per-request record restarts (tokens regenerate exactly
+        on re-serve — the fold-in RNG makes the retry invisible in
+        outputs).  The discarded work is BOOKED, not erased: of the
+        request's ``tokens_out``, all but the first (which came from the
+        prefill logits) were produced by decode steps whose
+        ``decode_tokens`` tally keeps counting them — they land in
+        ``wasted_decode_tokens`` so throughput accounting stays exact:
+        ``decode_tokens == (tokens_out - first_tokens) + wasted``."""
         self.preemptions += 1
         r = self.requests[req_id]
+        if r.first_token_s is not None and r.tokens_out > 0:
+            self.wasted_decode_tokens += r.tokens_out - 1
         r.admitted_s = None
         r.first_token_s = None
         r.finished_s = None
@@ -125,6 +158,13 @@ class ServeMetrics:
     @property
     def tokens_out(self) -> int:
         return sum(r.tokens_out for r in self.requests.values())
+
+    @property
+    def first_tokens(self) -> int:
+        """Requests whose (current) first token is live — first tokens come
+        from prefill logits, so they are excluded from decode accounting."""
+        return sum(1 for r in self.requests.values()
+                   if r.first_token_s is not None)
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -178,6 +218,8 @@ class ServeMetrics:
             "blocks_peak": self.blocks_peak,
             "blocks_total": self.blocks_total,
             "preemptions": self.preemptions,
+            "wasted_decode_tokens": self.wasted_decode_tokens,
+            "first_tokens": self.first_tokens,
             "ttft_mean_s": (sum(ttfts) / len(ttfts)) if ttfts else float("nan"),
             "ttft_p50_s": self._pct(ttfts, 0.50),
             "ttft_p95_s": self._pct(ttfts, 0.95),
@@ -205,6 +247,10 @@ class ServeMetrics:
                 f"{s['blocks_in_use']:.0f}/{s['blocks_total']:.0f} "
                 f"(peak {s['blocks_peak']:.0f}), "
                 f"preemptions {s['preemptions']:.0f}")
+        if s["preemptions"]:
+            lines.append(
+                f"preempt  : {s['wasted_decode_tokens']:.0f} decode tokens "
+                "discarded (regenerated exactly on re-serve)")
         lines += [
             f"ttft     : mean {s['ttft_mean_s'] * 1e3:.1f} ms, "
             f"p50 {s['ttft_p50_s'] * 1e3:.1f} ms, "

@@ -50,6 +50,9 @@ class Slot:
     output: List[int] = field(default_factory=list)
     # paged mode only:
     blocks: List[int] = field(default_factory=list)   # physical block table
+    # recurrent backend only: pooled state row (0 = none — row 0 is the
+    # sentinel row and is never allocated to a request)
+    rec_row: int = 0
     admit_seq: int = -1      # admission order (preemption picks the max)
 
     @property
@@ -116,6 +119,7 @@ class SlotTable:
         slot.pending_token = 0
         slot.output = []
         slot.blocks = []
+        slot.rec_row = 0
         slot.admit_seq = self._admits
 
     def activate(self, slot: Slot, first_token: int) -> None:
@@ -137,6 +141,10 @@ class SlotTable:
             raise RuntimeError(
                 f"slot {slot.index} released with {len(slot.blocks)} live "
                 "blocks — free them through the allocator first")
+        if slot.rec_row:
+            raise RuntimeError(
+                f"slot {slot.index} released with live recurrent row "
+                f"{slot.rec_row} — free it through the row pool first")
         request = slot.request
         slot.state = FREE
         slot.request = None
@@ -182,6 +190,18 @@ class SlotTable:
             req_ids[s.index] = s.req_id
             tok_idx[s.index] = s.generated
         return tokens, offsets, active, req_ids, tok_idx
+
+    def rec_rows(self) -> np.ndarray:
+        """[S] pooled recurrent-state rows for the batched decode step:
+        ACTIVE slots address their own row, every other row the sentinel
+        row 0 (whose gated write is a bit-exact no-op).  PREFILL slots'
+        rows are deliberately NOT mapped — their state advances through
+        the admission-prefill path only."""
+        rows = np.zeros((self.max_slots,), np.int32)
+        for s in self.slots:
+            if s.state == ACTIVE:
+                rows[s.index] = s.rec_row
+        return rows
 
     def block_tables(self) -> np.ndarray:
         """[S, n_max] int32 physical-block tables, sentinel-padded.  Masked

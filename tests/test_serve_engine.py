@@ -52,9 +52,19 @@ def _requests(cfg, lens, gens, seed=0, arrivals=None):
 # ---------------------------------------------------------------------------
 
 
-def test_engine_rejects_recurrent_arch():
-    with pytest.raises(ValueError, match="recurrent"):
-        ServeEngine(get_config("xlstm-1.3b-smoke"), None, EngineConfig())
+def test_engine_serves_recurrent_arch():
+    """Recurrent archs serve on the CONTINUOUS path (the SlotState row
+    backend) — the historical ValueError is gone.  Full wave-vs-continuous
+    token-identity coverage lives in test_serve_slot_state.py."""
+    xcfg = get_config("xlstm-1.3b-smoke")
+    xparams = T.init_params(xcfg, jax.random.key(0))
+    ecfg = EngineConfig(max_slots=2, max_len=16, prefill_chunk=4)
+    eng = ServeEngine(xcfg, xparams, ecfg)
+    assert eng.plan.has_recurrent and not eng.plan.has_kv
+    out = eng.run(_requests(xcfg, [4, 4], [3, 2]))
+    assert sorted(out) == [0, 1]
+    assert [len(out[0]), len(out[1])] == [3, 2]
+    assert eng.metrics.summary()["completed"] == 2
 
 
 def test_engine_rejects_frontend_arch():
@@ -63,8 +73,9 @@ def test_engine_rejects_frontend_arch():
 
 
 def test_wave_baseline_still_serves_recurrent_arch():
-    """The wave loop batch-prefills without chunk padding, so recurrent
-    caches stay exact — only the CONTINUOUS engine rejects them."""
+    """The wave loop batch-prefills without chunk padding, keeping
+    recurrent caches exact by construction — it is the token-identity
+    oracle the continuous recurrent path is checked against."""
     xcfg = get_config("xlstm-1.3b-smoke")
     xparams = T.init_params(xcfg, jax.random.key(0))
     ecfg = EngineConfig(max_slots=2, max_len=16)

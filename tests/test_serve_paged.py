@@ -255,6 +255,12 @@ def test_preempt_and_requeue_token_identical(cfg, params):
     assert eng.allocator.num_used == 0
     s = eng.metrics.summary()
     assert s["completed"] == 3 and s["preemptions"] == eng.metrics.preemptions
+    # the discarded decode work is booked EXACTLY: every decode-step token
+    # either reached a surviving output (tokens_out minus the prefill-born
+    # first tokens) or landed in wasted_decode_tokens
+    assert s["wasted_decode_tokens"] > 0
+    assert eng.metrics.decode_tokens == \
+        (s["tokens_out"] - s["first_tokens"]) + s["wasted_decode_tokens"]
 
 
 def test_preempt_resets_request_record(cfg, params):
@@ -268,6 +274,12 @@ def test_preempt_resets_request_record(cfg, params):
     for i, g in enumerate(gens):
         assert len(out[i]) == g
         assert eng.metrics.requests[i].tokens_out == g
+    # wasted accounting survives the reset: per-request tokens_out restart
+    # at zero on preemption, but the decode-step tally keeps every token
+    s = eng.metrics.summary()
+    assert eng.metrics.decode_tokens == \
+        (s["tokens_out"] - s["first_tokens"]) + s["wasted_decode_tokens"]
+    assert s["wasted_decode_tokens"] > 0
 
 
 # ---------------------------------------------------------------------------

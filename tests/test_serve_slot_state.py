@@ -1,0 +1,322 @@
+"""SlotState protocol: recurrent / hybrid serving on the continuous engine.
+
+What the per-layer backend refactor must guarantee:
+
+  * **wave-vs-continuous token identity** for every backend mix: pure
+    recurrent (xlstm), hybrid attention+mamba (jamba) on BOTH KV modes,
+    and pure attention (granite) — ``serve_waves`` is the oracle;
+  * **two-resource admission**: a request commits only when a recurrent
+    row AND (paged) enough KV blocks are free — no over-commit, no
+    deadlock, and outputs independent of pool sizes / admission order
+    (the fold-in RNG keys on req_id, never on scheduling);
+  * **preemption safety on hybrids**: blocks can run dry mid-decode and
+    preempt; the requeued request re-prefils its recurrence from scratch
+    and regenerates its tokens exactly;
+  * **resource hygiene**: a drained engine returns every row and block.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.serve import (EngineConfig, NoFreeRows, RecurrentRows, Request,
+                         ServeEngine, StatePlan, serve_waves)
+
+JAMBA = "jamba-v0.1-52b-smoke"
+
+
+@pytest.fixture(scope="module")
+def jcfg():
+    return get_config(JAMBA)
+
+
+@pytest.fixture(scope="module")
+def jparams(jcfg):
+    return T.init_params(jcfg, jax.random.key(0))
+
+
+def _requests(cfg, lens, gens, seed=0, arrivals=None):
+    rng = np.random.default_rng(seed)
+    return [Request(req_id=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=(n,)).tolist(),
+                    max_new_tokens=g,
+                    arrival_s=0.0 if arrivals is None else arrivals[i])
+            for i, (n, g) in enumerate(zip(lens, gens))]
+
+
+def _drive(eng, reqs, cap=5000):
+    """Run the engine to drain with a step bound (deadlock detector)."""
+    eng.submit(reqs)
+    eng.metrics.start()
+    steps = 0
+    while len(eng.queue) or eng.table.busy():
+        if not eng.table.busy():
+            nxt = eng.queue.next_arrival()
+            if nxt is not None:
+                eng.metrics.wait_until(nxt)
+        eng.step()
+        steps += 1
+        assert steps < cap, f"engine failed to drain within {cap} steps"
+    eng.metrics.stop()
+    return {r.req_id: eng.results[r.req_id] for r in reqs}
+
+
+def _assert_drained(eng):
+    """Every backend resource must be back in its pool after a drain."""
+    if eng.rec is not None:
+        eng.rec.assert_consistent()
+        assert eng.rec.num_used == 0
+    if eng.allocator is not None:
+        assert eng.allocator.num_used == 0
+
+
+# ---------------------------------------------------------------------------
+# host-side pools and plans
+# ---------------------------------------------------------------------------
+
+
+def test_recurrent_rows_alloc_order_and_exhaustion():
+    pool = RecurrentRows(3)
+    assert [pool.alloc() for _ in range(3)] == [1, 2, 3]   # deterministic
+    assert pool.num_free == 0
+    with pytest.raises(NoFreeRows):
+        pool.alloc()
+    pool.free(2)
+    assert pool.num_used == 2 and pool.alloc() == 2
+    pool.assert_consistent()
+
+
+def test_recurrent_rows_never_hands_out_sentinel():
+    pool = RecurrentRows(2)
+    rows = {pool.alloc(), pool.alloc()}
+    assert 0 not in rows
+    with pytest.raises(ValueError):
+        pool.free(0)            # sentinel row is not live, cannot be freed
+    with pytest.raises(ValueError):
+        pool.free(1) or pool.free(1)    # double free
+
+
+def test_state_plan_resolution(jcfg):
+    plan = StatePlan.resolve(jcfg, "paged")
+    assert plan.has_recurrent and plan.has_kv
+    assert plan.backends.count("recurrent") == 7    # 4 mamba + 3 mamba_moe
+    assert plan.backends.count("paged") == 1
+    assert plan.describe() == "1×paged + 7×recurrent"
+
+    xplan = StatePlan.resolve(get_config("xlstm-1.3b-smoke"), "contiguous")
+    assert xplan.has_recurrent and not xplan.has_kv and xplan.kv_mode is None
+
+    gplan = StatePlan.resolve(get_config("granite-34b-smoke"), "contiguous")
+    assert not gplan.has_recurrent and gplan.backends == ("contiguous",) * 2
+
+
+# ---------------------------------------------------------------------------
+# wave-vs-continuous token identity, per backend mix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["xlstm-1.3b-smoke", "granite-34b-smoke"])
+def test_identity_single_backend(arch):
+    """Pure-recurrent (masked aligned-chunk prefill) and pure-attention
+    archs match the wave oracle token for token; prompt length 9 with
+    chunk 4 forces a 1-valid-token masked tail on the recurrent path."""
+    cfg = get_config(arch)
+    params = T.init_params(cfg, jax.random.key(0))
+    ecfg = EngineConfig(max_slots=2, max_len=24, prefill_chunk=4,
+                        temperature=0.8, seed=11)
+    reqs = _requests(cfg, [9] * 4, [5, 3, 4, 2], seed=1)
+    oracle, _ = serve_waves(cfg, params, ecfg, reqs)
+    eng = ServeEngine(cfg, params, ecfg)
+    out = _drive(eng, _requests(cfg, [9] * 4, [5, 3, 4, 2], seed=1))
+    assert out == oracle
+    _assert_drained(eng)
+
+
+@pytest.mark.parametrize("kv_mode", ["contiguous", "paged"])
+def test_identity_hybrid(jcfg, jparams, kv_mode):
+    """Jamba mixes paged/contiguous KV and recurrent rows in ONE engine
+    run and still matches the oracle exactly."""
+    ecfg = EngineConfig(max_slots=2, max_len=32, prefill_chunk=4,
+                        temperature=0.7, seed=5, kv_mode=kv_mode,
+                        block_size=8)
+    reqs = _requests(jcfg, [10] * 4, [6, 4, 5, 3], seed=3)
+    oracle, _ = serve_waves(jcfg, jparams, ecfg, reqs)
+    eng = ServeEngine(jcfg, jparams, ecfg)
+    assert eng.plan.describe() == f"1×{kv_mode} + 7×recurrent"
+    out = _drive(eng, _requests(jcfg, [10] * 4, [6, 4, 5, 3], seed=3))
+    assert out == oracle
+    _assert_drained(eng)
+    if kv_mode == "paged":
+        # the hybrid really exercised BOTH pools in one run
+        assert eng.metrics.summary()["blocks_peak"] > 0
+        assert eng.metrics.peak_active > 0
+        # recurrent archs must never share prefix blocks (a hit would skip
+        # the recurrence) — the lookup gauge stays untouched
+        assert eng.metrics.prefix_lookup_tokens == 0
+
+
+def test_identity_hybrid_under_preemption(jcfg, jparams):
+    """A block pool too small for three growing hybrid requests forces a
+    mid-decode preemption; the victim re-prefils its RECURRENT state from
+    the prompt and regenerates its tokens exactly (fold-in RNG), so the
+    oracle match still holds — and the discarded decode work is booked."""
+    # chunks_per_step=4 lands every request in ACTIVE decode before the
+    # pool dries, so the preempted victim has decode tokens to discard
+    # (a victim caught mid-prefill would book zero waste)
+    ecfg = EngineConfig(max_slots=3, max_len=32, prefill_chunk=4,
+                        chunks_per_step=4, temperature=0.6, seed=9,
+                        kv_mode="paged", block_size=8, kv_blocks=8)
+    mk = lambda: _requests(jcfg, [14] * 3, [10, 10, 10], seed=7)
+    oracle, _ = serve_waves(jcfg, jparams, ecfg, mk())
+    eng = ServeEngine(jcfg, jparams, ecfg)
+    out = _drive(eng, mk())
+    s = eng.metrics.summary()
+    assert s["preemptions"] > 0, "geometry was meant to force preemption"
+    assert out == oracle
+    _assert_drained(eng)
+    # exact decode accounting: every decode-step token either reached a
+    # surviving output (tokens_out minus the prefill-born first tokens) or
+    # was discarded by a preemption — no modulo, no slack
+    assert s["decode_steps"] > 0
+    assert eng.metrics.decode_tokens == \
+        (s["tokens_out"] - s["first_tokens"]) + s["wasted_decode_tokens"]
+    assert s["wasted_decode_tokens"] > 0
+
+
+def test_two_resource_admission_rows_scarce(jcfg, jparams):
+    """rec_slots < max_slots makes recurrent rows the scarce resource:
+    concurrency caps at the row pool, admission defers (never deadlocks),
+    and outputs stay identical to the roomy engine."""
+    roomy = EngineConfig(max_slots=3, max_len=32, prefill_chunk=4,
+                         temperature=0.7, seed=5)
+    tight = EngineConfig(max_slots=3, max_len=32, prefill_chunk=4,
+                         temperature=0.7, seed=5, rec_slots=1)
+    mk = lambda: _requests(jcfg, [8, 6, 10, 7], [5, 4, 6, 3], seed=2)
+    e1 = ServeEngine(jcfg, jparams, roomy)
+    out1 = _drive(e1, mk())
+    e2 = ServeEngine(jcfg, jparams, tight)
+    assert e2.rec.capacity == 1
+    out2 = _drive(e2, mk())
+    assert out1 == out2
+    assert e2.metrics.peak_active <= 1      # rows, not slots, set the cap
+    _assert_drained(e1)
+    _assert_drained(e2)
+
+
+# ---------------------------------------------------------------------------
+# property: two-resource admission never over-commits, never deadlocks,
+# and scheduling never leaks into outputs
+# ---------------------------------------------------------------------------
+
+_ENGINES = {}
+
+
+def _engine(key):
+    """One engine per pool geometry, reused across property examples so
+    each compiled function is traced once (fresh req_ids per example keep
+    the fold-in RNG — and the metrics records — per-request exact).
+    Module-level memo instead of fixtures: the hypothesis stub's ``given``
+    wrapper hides the test signature from pytest, so fixture params would
+    swallow the drawn values."""
+    if "cfg" not in _ENGINES:
+        _ENGINES["cfg"] = get_config(JAMBA)
+        _ENGINES["params"] = T.init_params(_ENGINES["cfg"],
+                                           jax.random.key(0))
+    if key not in _ENGINES:
+        if key == "roomy-contig":
+            ecfg = EngineConfig(max_slots=3, max_len=32, prefill_chunk=4,
+                                temperature=0.9, seed=13)
+        elif key == "tight-paged":
+            ecfg = EngineConfig(max_slots=2, max_len=32, prefill_chunk=4,
+                                temperature=0.9, seed=13, kv_mode="paged",
+                                block_size=8, kv_blocks=7, rec_slots=1)
+        else:
+            raise KeyError(key)
+        _ENGINES[key] = ServeEngine(_ENGINES["cfg"], _ENGINES["params"],
+                                    ecfg)
+    return _ENGINES[key]
+
+
+_REQ_COUNTER = [1000]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.integers(1, 12), min_size=2, max_size=5), st.data())
+def test_admission_property(plens, data):
+    """For random request batches (ragged prompts, ragged budgets, jittered
+    arrivals): a slot-rich contiguous engine and a row-and-block-starved
+    paged engine produce IDENTICAL outputs, both drain within a bounded
+    step count, and both hand every resource back."""
+    cfg = _engine("roomy-contig").cfg
+    gens = [data.draw(st.integers(1, 6)) for _ in plens]
+    arrivals = [data.draw(st.sampled_from([0.0, 0.01, 0.03]))
+                for _ in plens]
+    arrivals[0] = 0.0
+    base = _REQ_COUNTER[0]
+    _REQ_COUNTER[0] += len(plens)
+
+    def mk(t0):
+        # arrivals ride the engine's (monotonically advancing) virtual
+        # clock so the jitter still staggers admission on reused engines
+        reqs = _requests(cfg, plens, gens, seed=base,
+                         arrivals=[t0 + a for a in arrivals])
+        for i, r in enumerate(reqs):
+            r.req_id = base + i
+        return reqs
+
+    outs = []
+    for key in ("roomy-contig", "tight-paged"):
+        eng = _engine(key)
+        outs.append(_drive(eng, mk(eng.metrics.now())))
+        _assert_drained(eng)
+        for i, g in enumerate(gens):
+            assert len(outs[-1][base + i]) <= g
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# determinism plumbing the protocol rides on
+# ---------------------------------------------------------------------------
+
+
+def test_queue_heap_preserves_arrival_then_id_order():
+    """The heap rewrite must keep the sorted-list contract: pops come in
+    (arrival_s, req_id) order with ties broken by req_id, regardless of
+    submit order — including preemption requeues landing mid-stream."""
+    from repro.serve import RequestQueue
+    q = RequestQueue()
+    mk = lambda i, t: Request(req_id=i, prompt=[1], max_new_tokens=1,
+                              arrival_s=t)
+    q.submit([mk(5, 0.2), mk(1, 0.1), mk(4, 0.1), mk(2, 0.2)])
+    assert q.next_arrival() == 0.1
+    assert q.pop_ready(1.0).req_id == 1
+    q.submit(mk(0, 0.0))                     # requeue jumps the line
+    assert [q.pop_ready(1.0).req_id for _ in range(4)] == [0, 4, 2, 5]
+    assert q.pop_ready(1.0) is None and len(q) == 0
+
+
+def test_virtual_step_clock_is_deterministic(jcfg, jparams):
+    """The default engine clock is virtual: two runs over identical
+    requests report IDENTICAL TTFTs (wall clocks never could), and the
+    serve loop never sleeps through arrival gaps (arrivals far in the
+    virtual future drain instantly in real time)."""
+    ecfg = EngineConfig(max_slots=2, max_len=32, prefill_chunk=4,
+                        temperature=0.5, seed=4)
+    assert ecfg.clock == "step"
+    # 300s of virtual arrival gaps: a sleeping clock would blow way past
+    # the suite timeout, the virtual clock jumps them instantly (compile
+    # time is the only real cost here)
+    mk = lambda: _requests(jcfg, [6, 6, 6], [3, 3, 3], seed=6,
+                           arrivals=[0.0, 150.0, 300.0])
+    e1 = ServeEngine(jcfg, jparams, ecfg)
+    _drive(e1, mk())
+    e2 = ServeEngine(jcfg, jparams, ecfg)
+    _drive(e2, mk())
+    assert e1.metrics.ttfts() == e2.metrics.ttfts()
+    # the idle jump really happened: the last first-token lands past the
+    # 300s virtual arrival, yet its TTFT (relative to arrival) stays tiny
+    last = max(r.first_token_s for r in e1.metrics.requests.values())
+    assert last >= 300.0 and e1.metrics.ttfts()[-1] < 1.0
