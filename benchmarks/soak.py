@@ -1,0 +1,202 @@
+"""Soak + SLO harness CLI: fault-injected serving and training soaks.
+
+Serve mode drives the continuous-batching engine for thousands of
+virtual-clock steps under open-loop arrivals (Poisson or bursty) with a
+``FaultPlan`` injected — admission stalls, KV block-pool pressure — and
+asserts p99 TTFT RECOVERS to the pre-fault baseline band within a
+bounded number of steps after the fault window closes.  Train mode runs
+``runtime.soak.run_train_soak``: a slow rank triggers an actuated
+micro-batch rebalance, a killed rank triggers heartbeat-timeout
+detection, re-mesh onto the surviving fsync domain, checkpoint-restore,
+and loss-trajectory continuity.  Everything runs on the virtual step
+clock, so every number below is deterministic per seed.
+
+Standalone:
+  PYTHONPATH=src python -m benchmarks.soak --smoke --devices 8
+  PYTHONPATH=src python -m benchmarks.soak --mode serve \
+      --soak-steps 4000 --arrival burst:40,0.5 \
+      --fault-plan 'stall:steps=700..760;blocks:frac=0.5,steps=1000..1200' \
+      --slo-p99-ms 200 --devices 8
+
+``--smoke`` (CI) runs the 2000-step serve soak (one stall + one
+block-pressure window) AND the training soak (one slow rank + one killed
+rank) on 8 host devices, then writes the committed BENCH_serve.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import tempfile
+
+import numpy as np
+
+SMOKE_STEPS = 2000
+SMOKE_ARRIVAL = "burst:40,0.5"
+SMOKE_PLAN = "stall:steps=700..760;blocks:frac=0.5,steps=1000..1200"
+
+
+def _round(x, nd=4):
+    if isinstance(x, float):
+        return round(x, nd) if math.isfinite(x) else None
+    return x
+
+
+def run_serve_soak(steps: int, arrival: str, fault_plan: str,
+                   slo_p99_ms: float | None, devices: int, seed: int,
+                   arch: str = "gemma2-2b-smoke"):
+    import jax
+
+    from repro.models import transformer as T
+    from repro.models.registry import get_config
+    from repro.runtime.chaos import FaultPlan
+    from repro.serve import (EngineConfig, Request, ServeEngine, SoakConfig,
+                             parse_arrival_spec, run_soak)
+    from benchmarks.serve_bench import _mesh_for
+
+    cfg = get_config(arch)
+    params = T.init_params(cfg, jax.random.key(0))
+    max_slots = 8
+    ecfg = EngineConfig(max_slots=max_slots, max_len=32, prefill_chunk=8,
+                        chunks_per_step=2, kv_mode="paged", block_size=8,
+                        kv_blocks=4 * max_slots + 1, clock="step")
+    engine = ServeEngine(cfg, params, ecfg,
+                         mesh=_mesh_for(devices, max_slots))
+
+    # size the request stream to the arrival process over the soak horizon
+    rate = 40.0 if ":" not in arrival else float(
+        arrival.split(":", 1)[1].split(",")[0])
+    n = max(1, int(rate * steps * ecfg.step_s))
+    arrivals = parse_arrival_spec(arrival, n, seed=seed)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(req_id=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=(8,)).tolist(),
+                    max_new_tokens=int(rng.integers(4, 13)),
+                    arrival_s=arrivals[i])
+            for i in range(n)]
+
+    plan = FaultPlan.parse(fault_plan)
+    scfg = SoakConfig(steps=steps, window=max(10, steps // 40),
+                      warmup_steps=max(50, steps // 10),
+                      recovery_band=1.5, recovery_slack_s=0.01,
+                      recovery_steps=max(200, steps // 4),
+                      slo_p99_s=slo_p99_ms / 1e3 if slo_p99_ms else None)
+    res = run_soak(engine, reqs, plan, scfg)
+
+    print(f"soak/serve,steps={steps},requests={n},arrival={arrival}")
+    print(f"soak/serve,faults={plan.spec()!r}")
+    print(f"soak/serve,baseline_p99={res.baseline_p99_s * 1e3:.1f}ms,"
+          f"stream_p99={res.summary['ttft_p99_stream_s'] * 1e3:.1f}ms,"
+          f"queue_peak={res.summary['queue_peak']:.0f},"
+          f"preempt={res.summary['preemptions']:.0f}")
+    spike = max((r["ttft_p99_s"] for r in res.trend
+                 if r["first_tokens"] and plan.first_fault_start() is not None
+                 and r["step"] > plan.first_fault_start()), default=float("nan"))
+    print(f"soak/serve,fault_end={res.fault_end_step},"
+          f"worst_p99={spike * 1e3:.1f}ms,"
+          f"recovered_step={res.recovered_step},"
+          f"recovery_steps={res.recovery_steps_taken}")
+    assert res.ok, res.failures
+    print(f"soak/claim,ok,p99 TTFT returned to {scfg.recovery_band}x "
+          f"baseline within {res.recovery_steps_taken} steps of fault end")
+    return {
+        "steps": steps, "requests": n, "arrival": arrival,
+        "fault_plan": plan.spec(),
+        "baseline_p99_ms": _round(res.baseline_p99_s * 1e3, 2),
+        "worst_window_p99_ms": _round(spike * 1e3, 2),
+        "fault_end_step": res.fault_end_step,
+        "recovered_step": res.recovered_step,
+        "recovery_steps": res.recovery_steps_taken,
+        "recovery_band": scfg.recovery_band,
+        "summary": {k: _round(v) for k, v in res.summary.items()},
+        "trend": [{k: _round(v) for k, v in row.items()}
+                  for row in res.trend],
+    }
+
+
+def run_train_soak_bench():
+    from repro.runtime.soak import (TrainSoakConfig, check_train_soak,
+                                    run_train_soak)
+
+    scfg = TrainSoakConfig()
+    with tempfile.TemporaryDirectory() as d:
+        res = check_train_soak(run_train_soak(scfg, d), scfg)
+    rec = res.recovery or {}
+    print(f"soak/train,steps={scfg.total_steps},faults={scfg.fault_spec!r}")
+    print(f"soak/train,actuated_shares={res.actuated_shares},"
+          f"recovery={rec.get('old_world')}->{rec.get('new_world')}ranks,"
+          f"level={rec.get('level')},restore_step={rec.get('restore_step')}")
+    assert res.ok, res.failures
+    print("soak/claim,ok,straggler rebalance actuated + killed rank "
+          "re-meshed onto surviving fsync domain with continuous loss")
+    return {
+        "total_steps": scfg.total_steps, "fault_plan": scfg.fault_spec,
+        "actuated_shares": res.actuated_shares,
+        "rebalance_events": len(res.rebalance),
+        "recovery": {k: (list(map(list, v)) if k == "tiles" else v)
+                     for k, v in rec.items()},
+        "replay_pairs": [[_round(a, 6), _round(b, 6)]
+                         for a, b in res.replay_pairs],
+        "first_losses": [_round(r["loss"]) for r in res.history[:3]],
+        "last_losses": [_round(r["loss"]) for r in res.history[-3:]],
+    }
+
+
+def run(mode: str, steps: int, arrival: str, fault_plan: str,
+        slo_p99_ms: float | None, devices: int, seed: int,
+        out: str | None) -> None:
+    report = {}
+    if mode in ("serve", "both"):
+        report["serve"] = run_serve_soak(steps, arrival, fault_plan,
+                                         slo_p99_ms, devices, seed)
+    if mode in ("train", "both"):
+        report["train"] = run_train_soak_bench()
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"soak/report,{out}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI configuration: 2000-step serve soak + train "
+                         "soak on 8 host devices, write BENCH_serve.json")
+    ap.add_argument("--mode", choices=("serve", "train", "both"),
+                    default="both")
+    ap.add_argument("--soak-steps", type=int, default=SMOKE_STEPS,
+                    help="virtual-clock engine steps for the serve soak")
+    ap.add_argument("--arrival", default=SMOKE_ARRIVAL,
+                    help="arrival spec: poisson:RATE | burst:RATE,DUTY"
+                         "[,PERIOD] | trace:SPEC")
+    ap.add_argument("--fault-plan", default=SMOKE_PLAN,
+                    help="';'-separated fault events "
+                         "(see repro.runtime.chaos)")
+    ap.add_argument("--slo-p99-ms", type=float, default=None,
+                    help="absolute steady-state p99 TTFT SLO to assert "
+                         "(virtual ms); default: band-recovery only")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="host devices (the train soak needs 8)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report here "
+                         "(--smoke default: BENCH_serve.json)")
+    args = ap.parse_args(argv)
+    if args.smoke and args.devices == 0:
+        args.devices = 8
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+    out = args.out
+    if args.smoke and out is None:
+        out = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_serve.json")
+    run(args.mode, args.soak_steps, args.arrival, args.fault_plan,
+        args.slo_p99_ms, args.devices, args.seed, out)
+
+
+if __name__ == "__main__":
+    main()

@@ -35,9 +35,10 @@ def make_production_mesh(*, multi_pod: bool = False):
                              devices=devices)
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, devices=None):
     return _compat_make_mesh(tuple(shape), tuple(axes),
-                             axis_types=(AxisType.Auto,) * len(axes))
+                             axis_types=(AxisType.Auto,) * len(axes),
+                             devices=devices)
 
 
 def describe(mesh) -> str:

@@ -60,8 +60,14 @@ def plan_recovery(tree: FractalTree, failed: Iterable[Coord],
 
 def build_mesh_from_tiles(tree: FractalTree, tiles: Sequence[Coord],
                           axis_names: Tuple[str, ...] = ("data", "model"),
-                          devices=None):
-    """Mesh over the surviving devices (device order follows tile order)."""
+                          devices=None,
+                          mesh_shape: Optional[Tuple[int, ...]] = None):
+    """Mesh over the surviving devices (device order follows tile order).
+
+    ``mesh_shape`` overrides the square-ish default — e.g. ``(world, 1)``
+    keeps all survivors on the data axis so the BSP sync domain stays the
+    whole surviving fsync subtree (the train-soak recovery path).
+    """
     devices = list(devices if devices is not None else jax.devices())
     flat_ids = []
     shape = tree.shape
@@ -71,9 +77,17 @@ def build_mesh_from_tiles(tree: FractalTree, tiles: Sequence[Coord],
             flat = flat * d + c
         flat_ids.append(flat)
     world = len(tiles)
-    plan = plan_recovery(tree, [t for t in tree.tiles() if t not in set(tiles)])
-    rows, cols = plan.mesh_shape
-    dev = np.array([devices[i] for i in flat_ids]).reshape(rows, cols)
+    if mesh_shape is None:
+        plan = plan_recovery(tree,
+                             [t for t in tree.tiles() if t not in set(tiles)])
+        mesh_shape = plan.mesh_shape
+    if math.prod(mesh_shape) != world:
+        raise ValueError(f"mesh_shape {mesh_shape} does not cover "
+                         f"{world} surviving tiles")
+    if len(mesh_shape) != len(axis_names):
+        raise ValueError(f"mesh_shape {mesh_shape} needs one entry per axis "
+                         f"name {axis_names}")
+    dev = np.array([devices[i] for i in flat_ids]).reshape(mesh_shape)
     if HAS_AXIS_TYPE:
         return jax.sharding.Mesh(dev, axis_names=axis_names,
                                  axis_types=(AxisType.Auto,) * len(axis_names))

@@ -24,7 +24,8 @@ import statistics
 import time
 from collections import defaultdict, deque
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence, Set,
+                    Tuple)
 
 from repro.core.tree import FractalTree
 
@@ -33,17 +34,32 @@ Coord = Tuple[int, ...]
 
 @dataclass
 class HostMonitor:
+    """Heartbeat registry with timeout-based failure detection.
+
+    ``clock`` injects the time source: None → wall clock
+    (``time.monotonic``), or any zero-arg callable — e.g. the virtual
+    ``runtime.chaos.StepClock`` — so soak runs detect heartbeat timeouts
+    deterministically on the step clock.  An explicit ``now=`` argument
+    always wins (the existing test surface).
+    """
+
     num_hosts: int
     timeout_s: float = 30.0
     last_seen: Dict[int, float] = field(default_factory=dict)
+    clock: Optional[Callable[[], float]] = None
+
+    def _now(self, now: Optional[float]) -> float:
+        if now is not None:
+            return now
+        return self.clock() if self.clock is not None else time.monotonic()
 
     def heartbeat(self, host: int, now: Optional[float] = None) -> None:
         if not 0 <= host < self.num_hosts:
             raise ValueError(f"host {host} outside 0..{self.num_hosts - 1}")
-        self.last_seen[host] = time.monotonic() if now is None else now
+        self.last_seen[host] = self._now(now)
 
     def failed_hosts(self, now: Optional[float] = None) -> Set[int]:
-        now = time.monotonic() if now is None else now
+        now = self._now(now)
         out = set()
         for h in range(self.num_hosts):
             seen = self.last_seen.get(h)
@@ -88,7 +104,21 @@ class StragglerTracker:
         In BSP the superstep ends at max(rank time); giving slow ranks fewer
         micro-batches flattens the barrier-arrival distribution — the same
         Ŝ = max(F) − max(R) metric the paper optimizes, attacked from the
-        arrival side."""
+        arrival side.
+
+        Every share is ≥ 1 (a rank with zero micro-batches would
+        desynchronize the collective), so the rebalance needs at least one
+        micro-batch per rank — fewer raises instead of spinning forever in
+        the drift-correction loop (every share would already be clamped at
+        1 with the sum still above the target).
+        """
+        if not ranks:
+            raise ValueError("rebalanced_shares needs at least one rank")
+        if total_microbatches < len(ranks):
+            raise ValueError(
+                f"cannot split {total_microbatches} micro-batches over "
+                f"{len(ranks)} ranks: every rank needs >= 1 (raise the "
+                "micro-batch count or shrink the sync domain)")
         speeds = {}
         for r in ranks:
             m = self.rank_speed(r)
@@ -96,17 +126,21 @@ class StragglerTracker:
         total_speed = sum(speeds.values())
         shares = {r: max(1, int(round(total_microbatches * s / total_speed)))
                   for r, s in speeds.items()}
-        # fix rounding drift deterministically (fastest ranks absorb it)
-        order = sorted(ranks, key=lambda r: -speeds[r])
+        # Fix rounding drift deterministically, preserving monotonicity in
+        # measured speed: excess comes off the SLOWEST ranks first (their
+        # shares can only move toward the faster ranks'), shortfall goes to
+        # the FASTEST first.  Ties break by rank id.
+        fastest_first = sorted(ranks, key=lambda r: (-speeds[r], r))
+        slowest_first = list(reversed(fastest_first))
         i = 0
         while sum(shares.values()) > total_microbatches:
-            r = order[i % len(order)]
+            r = slowest_first[i % len(slowest_first)]
             if shares[r] > 1:
                 shares[r] -= 1
             i += 1
         i = 0
         while sum(shares.values()) < total_microbatches:
-            shares[order[i % len(order)]] += 1
+            shares[fastest_first[i % len(fastest_first)]] += 1
             i += 1
         return shares
 

@@ -65,6 +65,18 @@ class TrainLoop:
     # extra metadata stamped into every checkpoint (e.g. the trainer's
     # superstep_layout fingerprint, validated on resume)
     ckpt_meta: Dict[str, Any] = field(default_factory=dict)
+    # host-side transform applied to every prefetched batch before
+    # device placement (e.g. data.pipeline.reshard_for_shares under an
+    # actuated rebalance)
+    batch_transform: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] \
+        = None
+    # closes the straggler loop: called with the rebalanced shares dict
+    # the first time it CHANGES; returns (step_fn, batch_transform) —
+    # typically a trainer rebuilt with shares= plus the matching
+    # reshard_for_shares — or None to keep the current pair
+    rebalance_actuator: Optional[Callable[[Dict[int, int]],
+                                          Optional[tuple]]] = None
+    _active_shares: Optional[Dict[int, int]] = None
 
     def _record_durations(self, metrics, dt: float) -> None:
         """Per-rank superstep durations → straggler tracker.
@@ -96,6 +108,14 @@ class TrainLoop:
             {"step": step, "stragglers": sorted(slow), "shares": shares})
         print(f"step {step:5d} stragglers {sorted(slow)} "
               f"-> micro-batch shares {shares}", flush=True)
+        if self.rebalance_actuator is not None \
+                and shares != self._active_shares:
+            # actuate only on CHANGE: rebuilding the step_fn recompiles,
+            # so a stable straggler pattern pays that cost once
+            out = self.rebalance_actuator(shares)
+            if out is not None:
+                self.step_fn, self.batch_transform = out
+                self._active_shares = shares
 
     def run(self) -> Dict[str, Any]:
         ckpt = (CheckpointManager(self.cfg.checkpoint_dir,
@@ -108,6 +128,8 @@ class TrainLoop:
             while step < self.cfg.total_steps:
                 data_step, host_batch = prefetch.next()
                 assert data_step == step, (data_step, step)
+                if self.batch_transform is not None:
+                    host_batch = self.batch_transform(host_batch)
                 batch = self._place(host_batch)
                 t0 = time.monotonic()
                 *state_parts, metrics = self.step_fn(*state, batch)

@@ -1,0 +1,324 @@
+"""Fault-injected training soak: actuated rebalance + elastic recovery.
+
+The serving soak (``repro.serve.soak``) stresses the engine; this module
+closes the two open control loops on the TRAINING side, end to end, on
+one process with host devices:
+
+  1. **Straggler actuation.**  A ``runtime.chaos.FaultPlan`` ``slow``
+     window inflates one rank's simulated superstep duration; the
+     ``StragglerTracker`` flags it; the loop's ``rebalance_actuator``
+     rebuilds the BSP step with UNEVEN per-rank micro-batch ``shares=``
+     and swaps in the matching ``reshard_for_shares`` batch transform.
+     Because the shares path is bit-consistent across partitions
+     (compensated-pair accumulation — see ``trainer.make_bsp_train_step``),
+     actuation changes WHO computes each micro-batch without perturbing
+     the loss trajectory by a single bit.
+
+  2. **Elastic recovery.**  A ``kill`` event silences one host's
+     heartbeats on the virtual ``StepClock``; the ``HostMonitor`` times
+     out; ``TrainLoop`` raises ``WorkerFailure``; the harness re-meshes
+     onto the largest surviving complete fsync domain
+     (``plan_recovery`` — the paper's programmable sync-domain feature
+     doing elastic scaling), restores parameters from the latest
+     checkpoint, and continues with even shares that PRESERVE the global
+     micro-batch count (each survivor takes ``grad_accum_scale`` × the
+     work).  Optimizer moments are ZeRO-1 sharded in a world-dependent
+     flat layout, so cross-world restore would bind them to the wrong
+     slices — they are deliberately re-initialized (recorded in the
+     result; exact cross-world moment resharding is a ROADMAP item).
+
+``check_train_soak`` asserts the robustness claims: the rebalance
+actually actuated (slow rank got the smallest share), the survivors form
+a complete fsync subtree, the first replayed loss matches the pre-fault
+recording at that step (parameters round-tripped through the checkpoint
+exactly; loss precedes any moment-dependent update), and the loss keeps
+descending after recovery.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint.checkpointing import CheckpointManager
+from repro.core.bsp import BSPConfig
+from repro.core.tree import FractalTree
+from repro.data.pipeline import DataConfig, SyntheticLM, reshard_for_shares
+from repro.runtime.chaos import FaultPlan, StepClock
+from repro.runtime.elastic import build_mesh_from_tiles, plan_recovery
+from repro.runtime.fault_tolerance import HostMonitor, StragglerTracker
+from repro.runtime.loop import LoopConfig, TrainLoop, WorkerFailure
+
+
+@dataclass(frozen=True)
+class TrainSoakConfig:
+    arch: str = "qwen2.5-3b-smoke"
+    tree_shape: Tuple[int, ...] = (2, 4)    # hosts = prod(tree_shape)
+    total_steps: int = 22
+    microbatches: int = 16                  # global per step, preserved
+    micro_rows: int = 1                     # rows per micro-batch
+    seq_len: int = 16
+    seed: int = 3
+    lr: float = 1e-3
+    checkpoint_every: int = 4
+    hb_timeout_s: float = 3.0               # steps on the virtual clock
+    straggler_window: int = 4
+    straggler_threshold: float = 1.5
+    # default plan: rank 3 runs 3× slow for steps [4, 10), rank 5 dies at
+    # step 12 — exercises actuation THEN recovery in one run
+    fault_spec: str = "slow:rank=3,factor=3.0,steps=4..10;kill:rank=5,step=12"
+    base_step_s: float = 1.0                # simulated healthy superstep
+
+
+@dataclass
+class TrainSoakResult:
+    history: List[Dict[str, Any]]           # pre-fault rows then replayed
+    rebalance: List[Dict[str, Any]]
+    actuated_shares: Optional[Dict[int, int]]
+    recovery: Optional[Dict[str, Any]]      # level/tiles/worlds/step
+    replay_pairs: List[Tuple[float, float]]  # (recorded, replayed) losses
+    failures: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+
+class _ChaosStep:
+    """Wraps the jitted step: injects per-rank durations from the plan,
+    ticks the virtual clock, emits heartbeats for every un-killed host
+    (honoring drop/duplicate events).  ``inner`` is swapped in place by
+    the rebalance actuator so the chaos envelope survives actuation."""
+
+    def __init__(self, inner, plan: FaultPlan, clock: StepClock,
+                 monitor: HostMonitor, world: int, base_s: float,
+                 start_step: int = 0):
+        self.inner = inner
+        self.plan, self.clock, self.monitor = plan, clock, monitor
+        self.world, self.base_s = world, base_s
+        self.step = start_step
+
+    def __call__(self, *args):
+        *state, metrics = self.inner(*args)
+        s = self.step
+        metrics = dict(metrics)
+        metrics["per_rank_step_s"] = [
+            self.base_s * self.plan.slow_factor(r, s)
+            for r in range(self.world)]
+        self.clock.tick()
+        killed = self.plan.killed_by(s)
+        for h in range(self.world):
+            if h in killed or self.plan.heartbeat_dropped(h, s):
+                continue
+            self.monitor.heartbeat(h)
+            if self.plan.heartbeat_duplicated(h, s):
+                self.monitor.heartbeat(h)
+        self.step += 1
+        return (*state, metrics)
+
+
+def _even_shares(m_total: int, world: int) -> Tuple[int, ...]:
+    if m_total % world:
+        raise ValueError(f"{m_total} micro-batches do not split evenly "
+                         f"over {world} ranks")
+    return (m_total // world,) * world
+
+
+def run_train_soak(scfg: TrainSoakConfig, checkpoint_dir: str,
+                   mesh_devices=None) -> TrainSoakResult:
+    """One fault-injected training soak (requires ``prod(tree_shape)``
+    jax devices, e.g. via --xla_force_host_platform_device_count)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import transformer as T
+    from repro.models.registry import get_config
+    from repro.optim import adamw
+    from repro.runtime import trainer
+
+    cfg = get_config(scfg.arch)
+    tree = FractalTree(scfg.tree_shape)
+    world = tree.num_tiles
+    cols = scfg.tree_shape[-1]
+    devices = list(mesh_devices if mesh_devices is not None
+                   else jax.devices())
+    if len(devices) < world:
+        raise RuntimeError(f"train soak needs {world} devices, "
+                           f"have {len(devices)}")
+    m_total = scfg.microbatches
+    plan = FaultPlan.parse(scfg.fault_spec)
+    clock = StepClock(step_s=1.0)
+    monitor = HostMonitor(num_hosts=world, timeout_s=scfg.hb_timeout_s,
+                          clock=clock)
+    for h in range(world):
+        monitor.heartbeat(h)
+
+    acfg = adamw.AdamWConfig(lr=scfg.lr, warmup_steps=1,
+                             total_steps=scfg.total_steps, grad_clip=0.0)
+    bsp = BSPConfig(sync_axes=("data",), schedule="fractal")
+    data = SyntheticLM(cfg, DataConfig(
+        global_batch=m_total * scfg.micro_rows, seq_len=scfg.seq_len,
+        seed=scfg.seed))
+    params0 = T.init_params(cfg, jax.random.key(0))
+
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((world, 1), ("data", "model"), devices=devices[:world])
+    shares0 = _even_shares(m_total, world)
+    step_fn, init_state = trainer.make_bsp_train_step(
+        cfg, mesh, acfg, bsp, shares=shares0)
+    state0 = init_state(params0)
+
+    chaos = _ChaosStep(step_fn, plan, clock, monitor, world,
+                       scfg.base_step_s)
+    result = TrainSoakResult(history=[], rebalance=[], actuated_shares=None,
+                             recovery=None, replay_pairs=[])
+
+    def actuator(shares_dict: Dict[int, int]):
+        if sorted(shares_dict) != list(range(world)):
+            return None
+        shares = tuple(shares_dict[r] for r in range(world))
+        new_fn, _ = trainer.make_bsp_train_step(
+            cfg, mesh, acfg, bsp, shares=shares)
+        chaos.inner = new_fn
+        result.actuated_shares = dict(shares_dict)
+        return chaos, (lambda b: reshard_for_shares(b, shares))
+
+    loop = TrainLoop(
+        step_fn=chaos, state=state0, data=data,
+        cfg=LoopConfig(total_steps=scfg.total_steps,
+                       checkpoint_every=scfg.checkpoint_every,
+                       log_every=1, checkpoint_dir=checkpoint_dir,
+                       rebalance_microbatches=m_total),
+        monitor=monitor,
+        stragglers=StragglerTracker(window=scfg.straggler_window,
+                                    threshold=scfg.straggler_threshold),
+        batch_transform=lambda b: reshard_for_shares(b, shares0),
+        rebalance_actuator=actuator,
+        ckpt_meta={"superstep_layout": init_state.superstep_layout})
+
+    try:
+        loop.run()
+        result.failures.append(
+            "fault plan injected no fatal failure: the soak never "
+            "exercised recovery")
+        result.history = loop.history
+        return result
+    except WorkerFailure as wf:
+        failed_hosts = set(wf.failed_hosts)
+    result.history = list(loop.history)
+    result.rebalance = list(loop.rebalance_history)
+
+    # ---- elastic recovery on the surviving fsync domain ------------------
+    failed_tiles = [divmod(h, cols) for h in sorted(failed_hosts)]
+    eplan = plan_recovery(tree, failed_tiles, old_world=world)
+    new_world = eplan.world
+    mesh2 = build_mesh_from_tiles(tree, eplan.tiles, devices=devices[:world],
+                                  mesh_shape=(new_world, 1))
+    ckpt = CheckpointManager(checkpoint_dir)
+    restored = ckpt.restore(state0)
+    if restored is None:
+        result.failures.append("no checkpoint to restore from")
+        return result
+    old_state, meta = restored
+    restore_step = int(meta["data_step"])
+    # even shares preserving the global micro-batch count: each survivor
+    # takes grad_accum_scale × its old share
+    shares2 = _even_shares(m_total, new_world)
+    step_fn2, init_state2 = trainer.make_bsp_train_step(
+        cfg, mesh2, acfg, bsp, shares=shares2)
+    # params round-trip exactly; ZeRO-1 moments are world-layout-bound
+    # (superstep_layout fingerprint differs) and restart from zero
+    params_r = jax.tree.unflatten(
+        jax.tree.structure(params0),
+        [jnp.asarray(v) for v in jax.tree.leaves(old_state[0])])
+    state2 = init_state2(params_r)
+    state2 = (state2[0], state2[1], state2[2], state2[3],
+              jnp.asarray(np.int32(restore_step)))
+    result.recovery = {
+        "failed_hosts": sorted(failed_hosts), "level": eplan.level,
+        "tiles": list(eplan.tiles), "old_world": world,
+        "new_world": new_world, "grad_accum_scale": eplan.grad_accum_scale,
+        "restore_step": restore_step, "moments_reinitialized": True,
+    }
+
+    clock2 = StepClock(step_s=1.0)
+    monitor2 = HostMonitor(num_hosts=new_world, timeout_s=scfg.hb_timeout_s,
+                           clock=clock2)
+    for h in range(new_world):
+        monitor2.heartbeat(h)
+    chaos2 = _ChaosStep(step_fn2, FaultPlan(), clock2, monitor2, new_world,
+                        scfg.base_step_s, start_step=restore_step)
+    loop2 = TrainLoop(
+        step_fn=chaos2, state=state2, data=data,
+        cfg=LoopConfig(total_steps=scfg.total_steps,
+                       checkpoint_every=scfg.checkpoint_every,
+                       log_every=1, checkpoint_dir=checkpoint_dir,
+                       rebalance_microbatches=0),
+        monitor=monitor2,
+        start_step=restore_step,
+        batch_transform=lambda b: reshard_for_shares(b, shares2),
+        ckpt_meta={"superstep_layout": init_state2.superstep_layout})
+    loop2.run()
+
+    recorded = {row["step"]: row["loss"] for row in result.history}
+    for row in loop2.history:
+        if row["step"] in recorded:
+            result.replay_pairs.append((recorded[row["step"]], row["loss"]))
+    result.history += loop2.history
+    return result
+
+
+def check_train_soak(result: TrainSoakResult,
+                     scfg: TrainSoakConfig) -> TrainSoakResult:
+    """Populate ``result.failures`` with every violated robustness claim."""
+    plan = FaultPlan.parse(scfg.fault_spec)
+    slow_ranks = {e.rank for e in plan.events if e.kind == "slow"}
+    if slow_ranks:
+        if result.actuated_shares is None:
+            result.failures.append("straggler rebalance never actuated")
+        else:
+            sh = result.actuated_shares
+            for r in slow_ranks:
+                if sh[r] != min(sh.values()):
+                    result.failures.append(
+                        f"slow rank {r} got share {sh[r]}, not the "
+                        f"minimum of {sh}")
+            if len(set(sh.values())) == 1:
+                result.failures.append(
+                    f"actuated shares {sh} are still even — no rebalance")
+    if result.recovery is None:
+        result.failures.append("elastic recovery never ran")
+    else:
+        tree = FractalTree(scfg.tree_shape)
+        rec = result.recovery
+        domains = list(tree.domains(rec["level"]))
+        if tuple(rec["tiles"]) not in [tuple(d) for d in domains]:
+            result.failures.append(
+                f"surviving tiles {rec['tiles']} are not a complete "
+                f"level-{rec['level']} fsync domain")
+        if rec["new_world"] * rec["grad_accum_scale"] != rec["old_world"]:
+            result.failures.append(
+                f"grad_accum_scale {rec['grad_accum_scale']} × new world "
+                f"{rec['new_world']} != old world {rec['old_world']}: "
+                "global batch not preserved")
+        if not result.replay_pairs:
+            result.failures.append(
+                "no overlap between pre-fault history and replayed steps "
+                "(checkpoint cadence vs detection latency)")
+        for rec_l, rep_l in result.replay_pairs[:1]:
+            # first replayed loss: computed from checkpoint-restored params
+            # BEFORE any moment-dependent update → must match the pre-fault
+            # recording (cross-world combine order shifts O(eps) at most)
+            if not math.isclose(rec_l, rep_l, rel_tol=1e-5, abs_tol=1e-5):
+                result.failures.append(
+                    f"replayed loss {rep_l!r} at restore step diverged from "
+                    f"pre-fault recording {rec_l!r}")
+    losses = [row["loss"] for row in result.history]
+    if len(losses) >= 6 and not (np.mean(losses[-3:]) < np.mean(losses[:3])):
+        result.failures.append(
+            f"loss did not descend across the soak: first {losses[:3]} "
+            f"vs last {losses[-3:]}")
+    return result

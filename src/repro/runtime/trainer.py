@@ -26,7 +26,7 @@ import hashlib
 import math
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -160,7 +160,8 @@ class BSPTrainState:
 
 
 def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
-                        bsp: BSPConfig, grad_accum: int = 1):
+                        bsp: BSPConfig, grad_accum: int = 1,
+                        shares: Optional[Sequence[int]] = None):
     """Explicit-schedule BSP superstep, pipelined over gradient buckets:
 
       compute:     local fwd/bwd on this rank's micro-batch(es) —
@@ -177,12 +178,43 @@ def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
     The per-bucket collectives are data-independent, so XLA may overlap
     bucket i's communication with the compute that feeds bucket j>i — the
     structural overlap the monolithic path (one bucket) cannot express.
+
+    ``shares`` (length-world, each ≥ 1) actuates a straggler rebalance:
+    rank r runs ``shares[r]`` micro-batches instead of an even split —
+    slow ranks genuinely do less work, flattening barrier arrival.  The
+    batch must arrive in the padded per-rank layout of
+    ``data.pipeline.reshard_for_shares`` (``max(shares)`` micro-batch
+    rows per rank; only the first ``shares[r]`` are real).  The global
+    gradient is the mean over ``sum(shares)`` micro-batches, weighted
+    correctly by construction — AND bit-identical in f32 across every
+    share partition of the same micro-batch set: each rank accumulates
+    its micro-gradients as a Neumaier compensated pair (value + running
+    error), both halves are all-gathered, and every rank sums all
+    ``2·world`` components in one fixed canonical order.  The result is
+    partition-independent to O(eps²), so uneven and even splits of
+    identical data produce byte-identical parameter updates (asserted in
+    tests/train_soak_checks.py).  The downstream reduce-scatter then sums
+    ``world`` identical copies — exactly ``world × shard`` in floats
+    (power-of-two doubling) — and the ``/world`` recovers the combined
+    gradient unchanged, so the whole superstep pipeline needs no other
+    modification.
     """
     ACT.clear_policy()   # manual-DP body: no data-axis GSPMD constraints
     if grad_accum < 1:
         raise ValueError(f"grad_accum must be >= 1, got {grad_accum}")
     sizes = tuple(mesh.shape[a] for a in bsp.sync_axes)
     world = math.prod(sizes)
+    if shares is not None:
+        if grad_accum != 1:
+            raise ValueError(
+                "shares= and grad_accum>1 are mutually exclusive: shares IS "
+                "the per-rank micro-batch count")
+        shares = tuple(int(s) for s in shares)
+        if len(shares) != world:
+            raise ValueError(
+                f"shares has {len(shares)} entries for world size {world}")
+        if any(s < 1 for s in shares):
+            raise ValueError(f"every rank needs >= 1 micro-batch: {shares}")
 
     pshape = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.key(0))
     # the engine's flat layout is f32 (grads/moments are f32 regardless of
@@ -244,12 +276,95 @@ def make_bsp_train_step(cfg: ArchConfig, mesh: Mesh, acfg: adamw.AdamWConfig,
         return (loss * inv, jax.tree.map(lambda v: v * inv, metrics),
                 jax.tree.map(lambda v: v * inv, grads))
 
+    def _pair_add(s, e, t):
+        """One Neumaier step on the compensated pair (s, e): s' = fl(s+t)
+        with the rounding error folded into e — (s'+e') carries the exact
+        sum to O(eps²)."""
+        x = s + t
+        e = e + jnp.where(jnp.abs(s) >= jnp.abs(t),
+                          (s - x) + t, (t - x) + s)
+        return x, e
+
+    def _tree_pair_add(s_tree, e_tree, t_tree):
+        x_tree = jax.tree.map(jnp.add, s_tree, t_tree)
+        e_tree = jax.tree.map(
+            lambda s, t, x, e: e + jnp.where(jnp.abs(s) >= jnp.abs(t),
+                                             (s - x) + t, (t - x) + s),
+            s_tree, t_tree, x_tree, e_tree)
+        return x_tree, e_tree
+
+    def local_grads_shares(params, batch):
+        """Uneven micro-batch accumulation, partition-independent in f32.
+
+        This rank's batch slice is ``max(shares)`` micro-batch rows; a
+        ``fori_loop`` with DYNAMIC trip count ``shares[rank]`` runs only
+        the real ones (padding rows are never computed), pair-accumulating
+        (loss, metrics, grads) in f32.  Both pair halves are all-gathered
+        over the sync axes and every rank reduces all ``2·world``
+        components in the same canonical order, so the returned global
+        means are replicated AND independent of how the micro-batches
+        were partitioned.  The cross-rank combine is unrolled over world
+        (fine at fsync-domain scale; a fixed-order segmented tree would
+        serve thousands of ranks).
+        """
+        vag = jax.value_and_grad(T.loss_fn, has_aux=True)
+        rows = jax.tree.leaves(batch)[0].shape[0]
+        n_max, m_total = max(shares), sum(shares)
+        if rows % n_max:
+            raise ValueError(f"per-rank batch {rows} rows not divisible by "
+                             f"max(shares) = {n_max} — re-shard the batch "
+                             "with data.pipeline.reshard_for_shares")
+        mb = rows // n_max
+        micro = jax.tree.map(
+            lambda v: v.reshape((n_max, mb) + v.shape[1:]), batch)
+        idx = 0                       # linear BSP rank, row-major sync axes
+        for ax, sz in zip(bsp.sync_axes, sizes):
+            idx = idx * sz + jax.lax.axis_index(ax)
+        n_r = jnp.asarray(shares, jnp.int32)[idx]
+
+        out_sd = jax.eval_shape(lambda p, b: vag(p, cfg, b), params,
+                                jax.tree.map(lambda v: v[0], micro))
+        zeros = jax.tree.map(lambda sd: jnp.zeros(sd.shape, jnp.float32),
+                             out_sd)
+
+        def body(i, carry):
+            mb_i = jax.tree.map(
+                lambda v: jax.lax.dynamic_index_in_dim(v, i, keepdims=False),
+                micro)
+            t = jax.tree.map(lambda v: v.astype(jnp.float32),
+                             vag(params, cfg, mb_i))
+            return _tree_pair_add(carry[0], carry[1], t)
+
+        s_tree, e_tree = jax.lax.fori_loop(0, n_r, body, (zeros, zeros))
+
+        def combine(s, e):
+            ag_s = jax.lax.all_gather(s, bsp.sync_axes, tiled=False)
+            ag_s = ag_s.reshape((world,) + s.shape)
+            ag_e = jax.lax.all_gather(e, bsp.sync_axes, tiled=False)
+            ag_e = ag_e.reshape((world,) + e.shape)
+            ts, te = jnp.zeros_like(s), jnp.zeros_like(s)
+            for rr in range(world):
+                ts, te = _pair_add(ts, te, ag_s[rr])
+            for rr in range(world):
+                ts, te = _pair_add(ts, te, ag_e[rr])
+            return (ts + te) / m_total
+
+        (loss, metrics), grads = jax.tree.map(combine, s_tree, e_tree)
+        return loss, metrics, grads
+
     def local_step(params, flat_mu, flat_nu, ef, step, batch):
-        loss, metrics, grads = local_grads(params, batch)
-        # report the GLOBAL mean loss (each rank saw its own micro-batch)
-        loss = jax.lax.psum(loss, bsp.sync_axes) / world
-        metrics = jax.tree.map(
-            lambda v: jax.lax.psum(v, bsp.sync_axes) / world, metrics)
+        if shares is not None:
+            # shares path: loss/metrics/grads come back as GLOBAL means,
+            # replicated on every rank (fixed-order compensated combine) —
+            # the reduce-scatter below sums world identical copies, which
+            # its /world recovers exactly (power-of-two doubling)
+            loss, metrics, grads = local_grads_shares(params, batch)
+        else:
+            loss, metrics, grads = local_grads(params, batch)
+            # report the GLOBAL mean loss (each rank saw its own micro-batch)
+            loss = jax.lax.psum(loss, bsp.sync_axes) / world
+            metrics = jax.tree.map(
+                lambda v: jax.lax.psum(v, bsp.sync_axes) / world, metrics)
 
         g_parts = engine.pack(jax.tree.leaves(grads), dtype=jnp.float32)
         if has_codec and ef is not None:

@@ -22,13 +22,18 @@ per layer from the architecture config (hybrid stacks mix them):
   metrics.ServeMetrics     per-request TTFT, per-step throughput, occupancy,
                            preemption waste, block-pool gauges — on a wall
                            OR virtual step clock (deterministic timing)
+  metrics.P2Quantile       O(1)-memory streaming quantile (P² algorithm)
+  soak.run_soak            fault-injected sustained-load soak + SLO-recovery
+                           harness (consumes a runtime.chaos.FaultPlan)
 """
 
 from .blocks import BlockAllocator, NoFreeBlocks, SENTINEL  # noqa: F401
 from .engine import EngineConfig, ServeEngine, serve_waves  # noqa: F401
-from .metrics import ServeMetrics  # noqa: F401
-from .queue import (Request, RequestQueue, poisson_arrivals,  # noqa: F401
-                    parse_arrival_spec, trace_arrivals)
+from .metrics import P2Quantile, ServeMetrics  # noqa: F401
+from .queue import (Request, RequestQueue, burst_arrivals,  # noqa: F401
+                    poisson_arrivals, parse_arrival_spec, trace_arrivals)
+from .soak import (SoakConfig, SoakResult, check_recovery,  # noqa: F401
+                   run_soak)
 from .slot_state import (NoFreeRows, REC_SENTINEL,  # noqa: F401
                          RecurrentRows, StatePlan)
 from .slots import SlotTable  # noqa: F401

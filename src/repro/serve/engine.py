@@ -231,6 +231,7 @@ class ServeEngine:
                                     clock=ecfg.clock, step_s=ecfg.step_s)
         self.results: Dict[int, List[int]] = {}
         self._key = jax.random.key(ecfg.seed)
+        self._admission_hold = 0     # steps left with admission stalled
 
         self._data_spec = None
         if mesh is not None:
@@ -647,12 +648,26 @@ class ServeEngine:
             self.metrics.on_token(slot.req_id)
             self._complete_if_done(slot, tok)
 
+    def hold_admission(self, steps: int) -> None:
+        """Stall admission for the next ``steps`` engine steps (fault
+        injection: a hung scheduler / admission-control brown-out).  Live
+        slots keep prefilling and decoding; only NEW admissions wait, so
+        the backlog — and TTFT — grows until the hold clears.  Overlapping
+        holds extend, not stack."""
+        if steps < 0:
+            raise ValueError(f"hold steps must be >= 0, got {steps}")
+        self._admission_hold = max(self._admission_hold, steps)
+
     def step(self) -> None:
         """One engine iteration: admissions, a prefill tick, a decode step,
         and a clock tick (virtual mode — wall time passes on its own)."""
-        self._admit_ready(self.metrics.now())
+        if self._admission_hold > 0:
+            self._admission_hold -= 1
+        else:
+            self._admit_ready(self.metrics.now())
         self._prefill_tick()
         self._decode_tick()
+        self.metrics.on_queue_depth(len(self.queue))
         self.metrics.tick()
 
     def run(self, requests: Optional[Sequence[Request]] = None

@@ -21,7 +21,77 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
+
+
+class P2Quantile:
+    """Jain & Chlamtac's P² streaming quantile estimator: O(1) memory,
+    one pass — the soak harness runs for thousands of steps and cannot
+    afford (nor needs) to sort the full latency history.  Exact below 5
+    observations, piecewise-parabolic marker interpolation after.
+    """
+
+    def __init__(self, q: float):
+        if not 0.0 < q < 1.0:
+            raise ValueError(f"quantile must be in (0,1), got {q}")
+        self.q = q
+        self.n = 0
+        self._heights: List[float] = []          # 5 marker heights
+        self._pos: List[float] = []              # marker positions (1-based)
+        self._want: List[float] = []             # desired positions
+        self._inc = (0.0, q / 2, q, (1 + q) / 2, 1.0)
+
+    def add(self, x: float) -> None:
+        self.n += 1
+        if self.n <= 5:
+            self._heights.append(float(x))
+            self._heights.sort()
+            if self.n == 5:
+                self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+                self._want = [1.0, 1 + 2 * self.q, 1 + 4 * self.q,
+                              3 + 2 * self.q, 5.0]
+            return
+        h, pos = self._heights, self._pos
+        if x < h[0]:
+            h[0] = float(x)
+            k = 0
+        elif x >= h[4]:
+            h[4] = float(x)
+            k = 3
+        else:
+            k = 0
+            while x >= h[k + 1]:
+                k += 1
+        for i in range(k + 1, 5):
+            pos[i] += 1.0
+        for i in range(5):
+            self._want[i] += self._inc[i]
+        for i in (1, 2, 3):
+            d = self._want[i] - pos[i]
+            if (d >= 1 and pos[i + 1] - pos[i] > 1) or \
+                    (d <= -1 and pos[i - 1] - pos[i] < -1):
+                d = 1.0 if d > 0 else -1.0
+                # parabolic (P²) update, clamped to stay monotone
+                hp = h[i] + d / (pos[i + 1] - pos[i - 1]) * (
+                    (pos[i] - pos[i - 1] + d) * (h[i + 1] - h[i])
+                    / (pos[i + 1] - pos[i])
+                    + (pos[i + 1] - pos[i] - d) * (h[i] - h[i - 1])
+                    / (pos[i] - pos[i - 1]))
+                if not h[i - 1] < hp < h[i + 1]:
+                    hp = h[i] + d * (h[i + int(d)] - h[i]) \
+                        / (pos[i + int(d)] - pos[i])
+                h[i] = hp
+                pos[i] += d
+
+    @property
+    def value(self) -> float:
+        if self.n == 0:
+            return float("nan")
+        if self.n <= 5:
+            xs = self._heights
+            i = min(len(xs) - 1, int(round(self.q * (len(xs) - 1))))
+            return xs[i]
+        return self._heights[2]
 
 
 @dataclass
@@ -59,11 +129,25 @@ class ServeMetrics:
     blocks_total: int = 0            # pool capacity (sentinel excluded)
     preemptions: int = 0             # preempt-and-requeue events
     wasted_decode_tokens: int = 0    # decode tokens discarded by preemption
+    queue_depth: int = 0             # admission backlog (gauge, per step)
+    queue_peak: int = 0              # backlog high-water mark
+    # event logs for windowed trend analysis (the soak harness turns them
+    # on; OFF by default so long-lived engines pay nothing):
+    record_events: bool = False
+    ttft_events: List[Tuple[float, float]] = field(default_factory=list)
+    tpot_events: List[Tuple[float, float]] = field(default_factory=list)
     clock: str = "wall"              # "wall" (measured) | "step" (virtual)
     step_s: float = 0.01             # virtual seconds per engine step
     _t0: Optional[float] = None
     _vt: float = 0.0                 # virtual clock position (step mode)
     wall_s: float = 0.0
+    # streaming percentile estimators (P², O(1) memory): always on — a
+    # preempted-and-reserved request contributes BOTH its ttft samples
+    # (the stream sees what clients saw; the per-request record keeps
+    # only the final one)
+    p2_ttft_p50: P2Quantile = field(default_factory=lambda: P2Quantile(0.5))
+    p2_ttft_p99: P2Quantile = field(default_factory=lambda: P2Quantile(0.99))
+    p2_tpot_p99: P2Quantile = field(default_factory=lambda: P2Quantile(0.99))
 
     # -- clock ------------------------------------------------------------
     def start(self) -> None:
@@ -108,8 +192,14 @@ class ServeMetrics:
         self.prefill_tokens += n_tokens
 
     def on_first_token(self, req_id: int) -> None:
-        self.requests[req_id].first_token_s = self.now()
-        self.requests[req_id].tokens_out += 1
+        r = self.requests[req_id]
+        r.first_token_s = self.now()
+        r.tokens_out += 1
+        ttft = r.first_token_s - r.arrival_s
+        self.p2_ttft_p50.add(ttft)
+        self.p2_ttft_p99.add(ttft)
+        if self.record_events:
+            self.ttft_events.append((r.first_token_s, ttft))
 
     def on_decode_step(self, n_active: int) -> None:
         self.decode_steps += 1
@@ -121,7 +211,18 @@ class ServeMetrics:
         self.requests[req_id].tokens_out += 1
 
     def on_finish(self, req_id: int) -> None:
-        self.requests[req_id].finished_s = self.now()
+        r = self.requests[req_id]
+        r.finished_s = self.now()
+        if r.first_token_s is not None and r.tokens_out > 1:
+            tpot = (r.finished_s - r.first_token_s) / (r.tokens_out - 1)
+            self.p2_tpot_p99.add(tpot)
+            if self.record_events:
+                self.tpot_events.append((r.finished_s, tpot))
+
+    def on_queue_depth(self, depth: int) -> None:
+        """Admission-backlog gauge, sampled once per engine step."""
+        self.queue_depth = depth
+        self.queue_peak = max(self.queue_peak, depth)
 
     def on_prefix_lookup(self, hit_tokens: int, total_tokens: int) -> None:
         """One admission's prefix-cache outcome: ``hit_tokens`` of the
@@ -220,9 +321,16 @@ class ServeMetrics:
             "preemptions": self.preemptions,
             "wasted_decode_tokens": self.wasted_decode_tokens,
             "first_tokens": self.first_tokens,
+            "queue_peak": self.queue_peak,
             "ttft_mean_s": (sum(ttfts) / len(ttfts)) if ttfts else float("nan"),
             "ttft_p50_s": self._pct(ttfts, 0.50),
             "ttft_p95_s": self._pct(ttfts, 0.95),
+            "ttft_p99_s": self._pct(ttfts, 0.99),
+            # streaming (P²) views — what a week-long soak reports when the
+            # per-request table is long gone
+            "ttft_p50_stream_s": self.p2_ttft_p50.value,
+            "ttft_p99_stream_s": self.p2_ttft_p99.value,
+            "tpot_p99_stream_s": self.p2_tpot_p99.value,
             "wall_s": wall,
             "tokens_per_s": self.tokens_out / wall if wall > 0 else 0.0,
         }

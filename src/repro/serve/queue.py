@@ -9,9 +9,14 @@ Arrival generators:
 
   * ``poisson_arrivals(n, rate, seed)`` — exponential inter-arrival gaps
     (the classic open-loop load model), in seconds of engine clock;
+  * ``burst_arrivals(n, rate, duty, period, seed)`` — on-off (bursty)
+    traffic: Poisson at ``rate/duty`` during the first ``duty`` fraction
+    of each period, silent for the rest — queue-depth spikes at a given
+    long-run average rate (the soak harness's worst case);
   * ``trace_arrivals(spec)``           — explicit timestamps, either a
     comma-separated string ("0,0.5,0.5,2") or a file with one per line;
-  * ``parse_arrival_spec("poisson:8", n, seed)`` — the CLI surface.
+  * ``parse_arrival_spec("poisson:8", n, seed)`` — the CLI surface
+    (immediate | poisson:RATE | burst:RATE,DUTY[,PERIOD] | trace:SPEC).
 """
 
 from __future__ import annotations
@@ -99,6 +104,38 @@ def poisson_arrivals(n: int, rate_per_s: float, seed: int = 0
     return tuple(np.cumsum(gaps).tolist())
 
 
+def burst_arrivals(n: int, rate_per_s: float, duty: float,
+                   period_s: float = 1.0, seed: int = 0
+                   ) -> Tuple[float, ...]:
+    """On-off bursty arrivals averaging ``rate_per_s`` requests/second.
+
+    Each ``period_s`` window is "on" for its first ``duty`` fraction and
+    silent for the rest; during the on-phase arrivals are Poisson at the
+    peak rate ``rate_per_s / duty``, so the long-run average matches the
+    equivalent Poisson load while the instantaneous rate spikes 1/duty×.
+    Deterministic per (n, rate, duty, period, seed): a Poisson stream is
+    drawn on the compressed "on-time" axis and mapped onto wall time by
+    inserting the off-gaps.
+    """
+    if rate_per_s <= 0:
+        raise ValueError("burst rate must be > 0")
+    if not 0.0 < duty <= 1.0:
+        raise ValueError(f"burst duty must be in (0,1], got {duty}")
+    if period_s <= 0:
+        raise ValueError("burst period must be > 0")
+    if n == 0:
+        return ()
+    rng = np.random.default_rng(seed)
+    peak = rate_per_s / duty
+    gaps = rng.exponential(1.0 / peak, size=n)
+    gaps[0] = 0.0                       # first request arrives immediately
+    t_on = np.cumsum(gaps)              # time on the compressed on-axis
+    on_len = duty * period_s
+    k = np.floor(t_on / on_len)
+    times = k * period_s + (t_on - k * on_len)
+    return tuple(times.tolist())
+
+
 def trace_arrivals(spec: str) -> Tuple[float, ...]:
     """Timestamps from a comma-separated string or a one-per-line file."""
     if os.path.exists(spec):
@@ -119,6 +156,8 @@ def parse_arrival_spec(spec: str, n: int, seed: int = 0) -> Tuple[float, ...]:
 
       "immediate"      every request present at t=0 (closed-loop batch)
       "poisson:RATE"   open-loop Poisson at RATE req/s
+      "burst:RATE,DUTY[,PERIOD]"  on-off bursty traffic averaging RATE
+                       req/s, on for DUTY of each PERIOD (default 1 s)
       "trace:SPEC"     explicit timestamps (string or file); must supply at
                        least n arrivals, truncated to the first n
     """
@@ -126,6 +165,14 @@ def parse_arrival_spec(spec: str, n: int, seed: int = 0) -> Tuple[float, ...]:
         return (0.0,) * n
     if spec.startswith("poisson:"):
         return poisson_arrivals(n, float(spec.split(":", 1)[1]), seed)
+    if spec.startswith("burst:"):
+        parts = spec.split(":", 1)[1].split(",")
+        if len(parts) not in (2, 3):
+            raise ValueError(
+                f"burst spec needs RATE,DUTY[,PERIOD], got {spec!r}")
+        rate, duty = float(parts[0]), float(parts[1])
+        period = float(parts[2]) if len(parts) == 3 else 1.0
+        return burst_arrivals(n, rate, duty, period_s=period, seed=seed)
     if spec.startswith("trace:"):
         times = trace_arrivals(spec.split(":", 1)[1])
         if len(times) < n:
@@ -133,4 +180,5 @@ def parse_arrival_spec(spec: str, n: int, seed: int = 0) -> Tuple[float, ...]:
                 f"trace has {len(times)} arrivals for {n} requests")
         return times[:n]
     raise ValueError(f"unknown arrival spec {spec!r} "
-                     "(immediate | poisson:RATE | trace:SPEC)")
+                     "(immediate | poisson:RATE | burst:RATE,DUTY[,PERIOD] "
+                     "| trace:SPEC)")

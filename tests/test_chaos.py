@@ -1,0 +1,93 @@
+"""FaultPlan DSL + StepClock: parsing, queries, determinism."""
+
+import pytest
+
+from repro.runtime.chaos import FaultEvent, FaultPlan, StepClock
+from repro.runtime.fault_tolerance import HostMonitor
+
+SPEC = ("kill:rank=2,step=300;"
+        "slow:rank=3,factor=2.5,steps=100..140;"
+        "drop_hb:host=1,steps=50..60;"
+        "dup_hb:host=0,step=75;"
+        "stall:steps=200..220;"
+        "blocks:frac=0.5,steps=150..200")
+
+
+def test_parse_and_roundtrip():
+    plan = FaultPlan.parse(SPEC)
+    assert len(plan.events) == 6
+    assert FaultPlan.parse(plan.spec()).spec() == plan.spec()
+    assert FaultPlan.parse("").spec() == ""
+    assert not FaultPlan() and bool(plan)
+
+
+def test_queries():
+    plan = FaultPlan.parse(SPEC)
+    assert plan.kills_at(300) == {2} and plan.kills_at(299) == set()
+    assert plan.killed_by(299) == set()
+    assert plan.killed_by(300) == plan.killed_by(10_000) == {2}
+    assert plan.slow_factor(3, 100) == 2.5
+    assert plan.slow_factor(3, 140) == 1.0      # half-open window
+    assert plan.slow_factor(0, 100) == 1.0
+    assert plan.heartbeat_dropped(1, 50) and not plan.heartbeat_dropped(1, 60)
+    assert plan.heartbeat_duplicated(0, 75)
+    assert not plan.heartbeat_duplicated(0, 76)
+    assert plan.admission_stalled(200) and not plan.admission_stalled(220)
+    assert plan.block_pressure(150) == 0.5
+    assert plan.block_pressure(200) == 0.0
+    assert plan.first_fault_start() == 50
+    assert plan.last_fault_end() == 301
+    assert (50, 60) in plan.fault_windows()
+
+
+def test_slow_factor_overlap_takes_max():
+    plan = FaultPlan.parse("slow:rank=0,factor=2,steps=0..10;"
+                           "slow:rank=0,factor=3,steps=5..8")
+    assert plan.slow_factor(0, 6) == 3.0
+    assert plan.slow_factor(0, 9) == 2.0
+
+
+@pytest.mark.parametrize("bad", [
+    "melt:rank=1,step=3",                 # unknown kind
+    "kill:rank=1",                        # no window
+    "kill:rank=1,steps=5",                # steps needs A..B
+    "slow:rank=1,factor=0.5,steps=1..2",  # factor must be > 1
+    "slow:factor=2,steps=1..2",           # needs a rank
+    "blocks:frac=1.5,steps=1..2",         # frac in (0,1]
+    "stall:steps=5..5",                   # empty window
+    "kill:rank 1,step=3",                 # not key=value
+])
+def test_bad_specs_raise(bad):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(bad)
+
+
+def test_event_spec_roundtrip_point_vs_window():
+    e = FaultEvent("stall", 7, 8)
+    assert FaultPlan.parse(e.spec()).events[0] == e
+    w = FaultEvent("stall", 7, 19)
+    assert FaultPlan.parse(w.spec()).events[0] == w
+
+
+def test_random_plans_are_seed_deterministic():
+    a = FaultPlan.random(seed=11, steps=2000, ranks=8)
+    b = FaultPlan.random(seed=11, steps=2000, ranks=8)
+    c = FaultPlan.random(seed=12, steps=2000, ranks=8)
+    assert a.spec() == b.spec()
+    assert a.spec() != c.spec()
+    assert a.events[0].kind == "slow"       # always a pre-kill baseline fault
+    for e in a.events:
+        assert 500 <= e.step < 1500         # inside [steps//4, 3·steps//4)
+
+
+def test_step_clock_drives_host_monitor():
+    clock = StepClock(step_s=1.0)
+    mon = HostMonitor(num_hosts=2, timeout_s=3.0, clock=clock)
+    mon.heartbeat(0)
+    mon.heartbeat(1)
+    clock.tick(3)
+    assert mon.failed_hosts() == set()      # 3.0 is not > 3.0
+    mon.heartbeat(0)
+    clock.tick()
+    assert mon.failed_hosts() == {1}
+    assert clock() == clock.now() == 4.0

@@ -61,3 +61,70 @@ def test_no_survivors_raises():
     tree = FractalTree((1, 2))
     with pytest.raises(RuntimeError):
         surviving_domain(tree, failed=list(tree.tiles()))
+
+
+# ---------------------------------------------------------------------------
+# rebalanced_shares: regression + property suite
+# ---------------------------------------------------------------------------
+
+
+def test_rebalance_fewer_microbatches_than_ranks_raises():
+    """Regression: total < len(ranks) used to spin forever in the drift
+    loop (every share clamped at 1 with the sum still above the target)."""
+    t = StragglerTracker()
+    with pytest.raises(ValueError, match="micro-batches"):
+        t.rebalanced_shares([0, 1, 2, 3], total_microbatches=3)
+    with pytest.raises(ValueError, match="at least one rank"):
+        t.rebalanced_shares([], total_microbatches=4)
+    # the boundary case terminates: one micro-batch per rank
+    assert t.rebalanced_shares([0, 1, 2], 3) == {0: 1, 1: 1, 2: 1}
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    durations=st.lists(st.floats(min_value=0.05, max_value=50.0),
+                       min_size=1, max_size=12),
+    extra=st.integers(min_value=0, max_value=40),
+)
+def test_rebalanced_shares_properties(durations, extra):
+    """∀ measured speeds: every share ≥ 1, the sum is exactly the total,
+    strictly faster ranks never get fewer micro-batches, and the drift
+    loop terminates (the call returns at all)."""
+    t = StragglerTracker(window=4)
+    for rank, d in enumerate(durations):
+        for _ in range(3):
+            t.record(rank, d)
+    ranks = list(range(len(durations)))
+    total = len(ranks) + extra
+    shares = t.rebalanced_shares(ranks, total)
+    assert set(shares) == set(ranks)
+    assert all(s >= 1 for s in shares.values())
+    assert sum(shares.values()) == total
+    for a in ranks:
+        for b in ranks:
+            if durations[a] < durations[b]:       # a strictly faster
+                assert shares[a] >= shares[b], (
+                    f"faster rank {a} ({durations[a]}s) got {shares[a]} < "
+                    f"slower rank {b} ({durations[b]}s) with {shares[b]}")
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from([(2, 2), (2, 4), (4, 4), (8, 8)]), st.data(),
+       st.sampled_from([1, 2, 4]))
+def test_plan_recovery_properties(shape, data, accum_per_rank):
+    """∀ failure sets: survivors form a complete fsync subtree and
+    grad_accum_scale × surviving world covers the old world's work
+    (global batch preserved whenever old_world divides evenly)."""
+    tree = FractalTree(shape)
+    tiles = list(tree.tiles())
+    failed = set(data.draw(st.lists(st.sampled_from(tiles), min_size=1,
+                                    max_size=len(tiles) - 1, unique=True)))
+    plan = plan_recovery(tree, failed)
+    assert tuple(plan.tiles) in [tuple(d) for d in tree.domains(plan.level)]
+    assert not failed.intersection(plan.tiles)
+    assert plan.world == tree.domain_size(plan.level)
+    assert np.prod(plan.mesh_shape) == plan.world
+    # both worlds are powers of two, so the scale is exact
+    assert plan.grad_accum_scale * plan.world == tree.num_tiles
+    old_batch = tree.num_tiles * accum_per_rank
+    assert plan.world * (accum_per_rank * plan.grad_accum_scale) == old_batch

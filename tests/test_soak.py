@@ -1,0 +1,190 @@
+"""Serve-side soak harness: arrivals, streaming quantiles, fault injection.
+
+The full 2000-step soak runs in CI via ``benchmarks/soak.py --smoke``;
+here the pieces are tested small: bursty arrival structure, P² accuracy,
+admission holds, queue gauges, and a mini fault-injected ``run_soak``
+with a real engine (spike during the stall window, recovery after).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.runtime.chaos import FaultPlan
+from repro.serve import (EngineConfig, P2Quantile, Request, ServeEngine,
+                         SoakConfig, burst_arrivals, parse_arrival_spec,
+                         poisson_arrivals, run_soak)
+
+ARCH = "gemma2-2b-smoke"
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config(ARCH)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return T.init_params(cfg, jax.random.key(0))
+
+
+def _requests(cfg, n, arrivals, gen=(4, 12), plen=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(req_id=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=(plen,)).tolist(),
+                    max_new_tokens=int(rng.integers(gen[0], gen[1] + 1)),
+                    arrival_s=arrivals[i])
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# arrival generators
+# ---------------------------------------------------------------------------
+
+
+def test_burst_arrivals_deterministic_and_on_off():
+    a = burst_arrivals(400, rate_per_s=40.0, duty=0.25, seed=7)
+    b = burst_arrivals(400, rate_per_s=40.0, duty=0.25, seed=7)
+    assert a == b
+    assert burst_arrivals(400, 40.0, 0.25, seed=8) != a
+    assert a[0] == 0.0 and all(x <= y for x, y in zip(a, a[1:]))
+    # every arrival lands in the first duty fraction of its 1 s period
+    phases = np.asarray(a) % 1.0
+    assert phases.max() < 0.25
+    # long-run average matches the nominal rate (Poisson CLT bounds)
+    mean_rate = len(a) / a[-1]
+    assert 0.8 * 40.0 < mean_rate < 1.2 * 40.0
+
+
+def test_burst_matches_poisson_average_but_spikier():
+    burst = np.asarray(burst_arrivals(2000, 20.0, duty=0.2, seed=3))
+    pois = np.asarray(poisson_arrivals(2000, 20.0, seed=3))
+    # same order of total duration...
+    assert 0.7 < burst[-1] / pois[-1] < 1.3
+    # ...but at sub-period resolution (one on-phase per bin) the burst's
+    # peak instantaneous count spikes toward 1/duty × the Poisson peak
+    def peak_count(ts):
+        return max(np.histogram(ts, bins=np.arange(0, ts[-1] + 0.2,
+                                                   0.2))[0])
+    assert peak_count(burst) > 1.5 * peak_count(pois)
+
+
+def test_parse_arrival_spec_burst():
+    assert parse_arrival_spec("burst:40,0.25", 50, seed=1) == \
+        burst_arrivals(50, 40.0, 0.25, seed=1)
+    assert parse_arrival_spec("burst:40,0.25,2.0", 50, seed=1) == \
+        burst_arrivals(50, 40.0, 0.25, period_s=2.0, seed=1)
+    with pytest.raises(ValueError):
+        parse_arrival_spec("burst:40", 50)
+    with pytest.raises(ValueError):
+        burst_arrivals(10, 40.0, duty=0.0)
+
+
+# ---------------------------------------------------------------------------
+# P² streaming quantiles
+# ---------------------------------------------------------------------------
+
+
+def test_p2_exact_below_five_samples():
+    q = P2Quantile(0.5)
+    assert np.isnan(q.value)
+    for x in (5.0, 1.0, 3.0):
+        q.add(x)
+    assert q.value == 3.0
+
+
+def test_p2_tracks_numpy_percentile():
+    rng = np.random.default_rng(0)
+    xs = rng.exponential(1.0, size=20_000)
+    for p, tol in ((0.5, 0.05), (0.99, 0.15)):
+        q = P2Quantile(p)
+        for x in xs:
+            q.add(x)
+        exact = float(np.percentile(xs, 100 * p))
+        assert abs(q.value - exact) / exact < tol, (p, q.value, exact)
+
+
+def test_p2_rejects_bad_quantile():
+    with pytest.raises(ValueError):
+        P2Quantile(0.0)
+    with pytest.raises(ValueError):
+        P2Quantile(1.0)
+
+
+# ---------------------------------------------------------------------------
+# engine fault hooks
+# ---------------------------------------------------------------------------
+
+
+def test_hold_admission_delays_first_token(cfg, params):
+    ecfg = EngineConfig(max_slots=2, max_len=32, prefill_chunk=8,
+                        chunks_per_step=2, clock="step")
+    eng = ServeEngine(cfg, params, ecfg)
+    eng.metrics.start()
+    eng.submit(_requests(cfg, 1, [0.0]))
+    eng.hold_admission(3)
+    with pytest.raises(ValueError):
+        eng.hold_admission(-1)
+    for s in range(3):
+        eng.step()
+        assert len(eng.table.busy()) == 0, f"admitted during hold (step {s})"
+        assert len(eng.queue) == 1
+    eng.step()
+    assert len(eng.table.busy()) == 1       # hold expired → admitted
+    # overlapping holds extend, not stack
+    eng.hold_admission(2)
+    eng.hold_admission(1)
+    assert eng._admission_hold == 2
+
+
+def test_queue_depth_gauge(cfg, params):
+    ecfg = EngineConfig(max_slots=1, max_len=32, prefill_chunk=8,
+                        chunks_per_step=1, clock="step")
+    eng = ServeEngine(cfg, params, ecfg)
+    eng.metrics.start()
+    eng.submit(_requests(cfg, 4, [0.0] * 4, gen=(8, 8)))
+    for _ in range(6):
+        eng.step()
+    assert eng.metrics.queue_peak == 3      # 1 admitted, 3 behind it
+    assert eng.metrics.summary()["queue_peak"] == 3
+
+
+# ---------------------------------------------------------------------------
+# mini soak run (real engine, stall fault, recovery)
+# ---------------------------------------------------------------------------
+
+
+def test_run_soak_recovers_from_stall(cfg, params):
+    ecfg = EngineConfig(max_slots=4, max_len=32, prefill_chunk=8,
+                        chunks_per_step=2, kv_mode="paged", block_size=8,
+                        kv_blocks=17, clock="step")
+    eng = ServeEngine(cfg, params, ecfg)
+    steps, rate = 400, 40.0
+    n = int(rate * steps * ecfg.step_s)
+    reqs = _requests(cfg, n, poisson_arrivals(n, rate, seed=1), seed=2)
+    plan = FaultPlan.parse("stall:steps=150..210")
+    scfg = SoakConfig(steps=steps, window=40, warmup_steps=40,
+                      recovery_band=2.0, recovery_slack_s=0.01,
+                      recovery_steps=200)
+    res = run_soak(eng, reqs, plan, scfg)
+    assert res.ok, res.failures
+    assert res.fault_end_step == 210
+    assert res.recovered_step is not None
+    assert len(res.trend) == steps // 40
+    # the stall visibly backs up the queue inside its window
+    stall_rows = [r for r in res.trend if 150 < r["step"] <= 240]
+    assert max(r["queue_max"] for r in stall_rows) >= 3
+    assert res.summary["queue_peak"] >= 3
+    # recovery check is driven by the windowed p99 series
+    assert not np.isnan(res.baseline_p99_s)
+
+
+def test_run_soak_requires_step_clock(cfg, params):
+    eng = ServeEngine(cfg, params,
+                      EngineConfig(max_slots=2, max_len=32, prefill_chunk=8,
+                                   clock="wall"))
+    with pytest.raises(ValueError, match="virtual step clock"):
+        run_soak(eng, [], FaultPlan(), SoakConfig(steps=1))

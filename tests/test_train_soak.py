@@ -1,0 +1,30 @@
+"""Training soak end-to-end (8 host devices, subprocess).
+
+Runs tests/train_soak_checks.py in a fresh interpreter so the forced
+8-device host platform cannot leak into the rest of the suite: shares
+bit-consistency (uneven micro-batch splits are BIT-identical to even),
+then the full fault-injected soak — actuated straggler rebalance, killed
+rank, re-mesh onto the surviving fsync domain, checkpoint-restore, loss
+continuity.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+
+@pytest.mark.slow
+def test_train_soak_end_to_end():
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(root / "tests" / "train_soak_checks.py")],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "ALL OK" in proc.stdout
+    assert "BIT-IDENTICAL" in proc.stdout
